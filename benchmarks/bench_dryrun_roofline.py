@@ -1,0 +1,25 @@
+"""Roofline bench: renders the three-term roofline table from the cached
+dry-run artifacts (results/dryrun/*.json). One row per (arch × shape × mesh)
+— deliverable (g)'s machine-readable form."""
+
+from __future__ import annotations
+
+import os
+
+from repro.launch.roofline import load_all, render_table
+
+from .common import emit
+
+
+def run():
+    if not os.path.isdir("results/dryrun"):
+        emit("dryrun_roofline", 0.0, "no results/dryrun — run repro.launch.dryrun first")
+        return
+    rows = load_all("results/dryrun")
+    print(render_table(rows))
+    ok = [r for r in rows if r.status == "ok"]
+    emit("dryrun_roofline_cells", 0.0, f"ok={len(ok)},total={len(rows)}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Kernel benchmarks: Pallas (interpret) vs pure-jnp ref vs numpy host, plus
+the analytic MXU roofline of the byte-limb gf_matmul formulation.
+
+NOTE wall times here are CPU-interpret times (correctness harness), NOT TPU
+times; the derived column carries the analytic TPU-side numbers
+(16 int8-MXU passes per mod-matmul → peak_eff ≈ 197/4 TFLOP/s-equivalents
+for the 62-bit exact product, see DESIGN §7).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.field import M31, NTT, shoup_precompute
+from repro.kernels.butterfly.ops import butterfly_mac, butterfly_mac_reference
+from repro.kernels.gf_matmul.ops import gf_matmul
+from repro.kernels.gf_matmul.ref import gf_matmul_host, gf_matmul_ref
+
+from .common import emit, time_fn
+
+
+def run():
+    rng = np.random.default_rng(0)
+    q = M31
+    M, K, N = 128, 512, 128
+    a = jnp.asarray(rng.integers(0, q, size=(M, K), dtype=np.uint32))
+    b = jnp.asarray(rng.integers(0, q, size=(K, N), dtype=np.uint32))
+    us_pallas = time_fn(lambda: gf_matmul(a, b, q=q), iters=3)
+    # analytic: 16 uint8 dot passes of M*N*K MACs on the 197 TFLOP/s int8 MXU
+    macs = M * N * K
+    tpu_us = 16 * 2 * macs / 197e12 * 1e6
+    emit("gf_matmul_128x512x128_pallas_interp", us_pallas, f"analytic_tpu_us={tpu_us:.2f}")
+    us_ref = time_fn(lambda: gf_matmul_ref(a, b, q), iters=3)
+    emit("gf_matmul_128x512x128_jnp_ref", us_ref, "oracle")
+    import time as _t
+
+    t0 = _t.perf_counter()
+    gf_matmul_host(np.asarray(a), np.asarray(b), q)
+    emit("gf_matmul_128x512x128_numpy_host", ( _t.perf_counter() - t0) * 1e6, "host_oracle")
+
+    # butterfly fused MAC vs unfused ref
+    radix, B, P = 2, 256, 4096
+    parts = jnp.asarray(rng.integers(0, NTT, size=(radix, B, P), dtype=np.uint32))
+    tw = jnp.asarray(rng.integers(0, NTT, size=(B, radix), dtype=np.uint32))
+    tw_sh = jnp.asarray(np.asarray(shoup_precompute(np.asarray(tw), NTT)))
+    us_fused = time_fn(lambda: butterfly_mac(parts, tw, tw_sh, q=NTT), iters=3)
+    us_unfused = time_fn(lambda: butterfly_mac_reference(parts, tw, tw_sh, q=NTT), iters=3)
+    # analytic HBM traffic: fused reads radix·B·P + writes B·P once (vs
+    # unfused writing radix intermediate rounds): bytes ratio (radix+1)/(2radix)
+    emit(
+        "butterfly_mac_r2_256x4096_fused_interp",
+        us_fused,
+        f"unfused_us={us_unfused:.1f},hbm_bytes_fused={(radix + 1) * B * P * 4}",
+    )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Theorem 1 / Lemmas 1-3 (and Fig. 1): universal prepare-and-shoot.
+
+Columns: simulator-counted C1/C2, closed forms, lower bounds, baseline C2's
+(all-gather, direct), and wall time of the array-level executor.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bounds
+from repro.core.field import M31, Field
+from repro.core.matrices import random_matrix, random_vector
+from repro.core.prepare_shoot import encode_universal
+from repro.core.schedule import counted_c2, plan_prepare_shoot
+from repro.core.simulator import simulate_prepare_shoot
+
+from .common import emit, time_fn
+
+
+def run():
+    f = Field(M31)
+    print("# K,p,C1_sim,C1_lower,C2_sim,C2_thm1,C2_lower,C2_allgather,C2_direct")
+    for p in (1, 2, 3):
+        for K in (8, 16, 32, 64, 128, 256, 512):
+            plan = plan_prepare_shoot(K, p)
+            A = random_matrix(f, K, seed=K)
+            x = random_vector(f, K, seed=K + 1)
+            out, st = simulate_prepare_shoot(x, A, plan, f)
+            ag = bounds.allgather_baseline_c1_c2(K, p)[1]
+            di = bounds.direct_baseline_c1_c2(K, p)[1]
+            print(
+                f"# {K},{p},{st.C1},{bounds.lemma1_c1_lower(K, p)},{st.C2},"
+                f"{bounds.theorem1_c2(K, p)},{bounds.lemma2_c2_lower(K, p):.1f},{ag},{di}"
+            )
+            assert st.C1 == bounds.lemma1_c1_lower(K, p)
+            assert st.C2 == counted_c2(plan)
+    # executor wall time (K=64, payload 1024, runtime-A path)
+    K, payload = 64, 1024
+    A = jnp.asarray(random_matrix(f, K, seed=0).astype(np.uint32))
+    x = jnp.asarray(random_vector(f, (K, payload), seed=1).astype(np.uint32))
+    fn = jax.jit(lambda xx, aa: encode_universal(xx, aa, p=1, q=M31))
+    us = time_fn(fn, x, A)
+    emit("universal_ps_K64_payload1024", us, f"C2={bounds.theorem1_c2(K, 1)}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+# One function per paper table/figure. Print ``name,us_per_call,derived`` CSV.
+#
+# The paper is theory-only; its "tables" are Theorems 1-4 + Figures 1-4, each
+# of which gets a benchmark module; the coded-system applications (Remark 1,
+# §VI) and the dry-run roofline get their own.
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (
+        bench_universal,      # Theorem 1 / Lemmas 1-3 / Fig. 1-3
+        bench_dft,            # Theorem 2 / Fig. 4
+        bench_vandermonde,    # Theorem 3 / Remark 5
+        bench_lagrange,       # Theorem 4 + LCC (§VI)
+        bench_kernels,        # DESIGN §7 kernels
+        bench_coded_ckpt,     # Remark 1 application (coded checkpointing)
+        bench_gradient_coding,# straggler mitigation application
+        bench_dryrun_roofline # deliverable (g) table
+    )
+
+    print("name,us_per_call,derived")
+    failures = []
+    for mod in (
+        bench_universal,
+        bench_dft,
+        bench_vandermonde,
+        bench_lagrange,
+        bench_kernels,
+        bench_coded_ckpt,
+        bench_gradient_coding,
+        bench_dryrun_roofline,
+    ):
+        try:
+            mod.run()
+        except Exception:
+            failures.append(mod.__name__)
+            traceback.print_exc()
+    if failures:
+        print(f"FAILED: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

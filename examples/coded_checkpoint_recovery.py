@@ -1,0 +1,55 @@
+"""Kill-and-recover demo (Remark 1 application): 16 DP replicas hold shards
+of a training state; one all-to-all encode (Cauchy generator, universal
+prepare-and-shoot: C1=4 rounds, C2=Θ(√K)) builds in-HBM parity; we then kill
+up to 8 replicas and rebuild their shards bit-exactly — no disk, no master.
+
+Run:  PYTHONPATH=src python examples/coded_checkpoint_recovery.py
+"""
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.coded import build_parity_plan, encode_parity, recover_lost, shard_state_limbs, unshard_state_limbs
+from repro.core.bounds import CostModel, allgather_baseline_c1_c2
+from repro.core.schedule import counted_c2
+
+K = 16
+rng = np.random.default_rng(0)
+state = {
+    "params": jnp.asarray(rng.normal(size=(1_000_000,)).astype(np.float32)),
+    "m": jnp.asarray(rng.normal(size=(1_000_000,)).astype(np.float32)),
+    "v": jnp.asarray(abs(rng.normal(size=(1_000_000,))).astype(np.float32)),
+    "step": jnp.asarray(1234, jnp.int32),
+}
+
+shards, meta = shard_state_limbs(state, K)
+plan = build_parity_plan(K, p=1)
+print(f"state: {meta.total * 2 / 1e6:.1f} MB as {K} shards of {shards.shape[1] * 2 / 1e6:.2f} MB")
+print(f"encode schedule: C1={plan.c1} rounds, C2={counted_c2(plan.ps_plan)} elements/port "
+      f"(all-gather baseline: {allgather_baseline_c1_c2(K, 1)[1]})")
+
+t0 = time.time()
+parity = np.asarray(jax.jit(lambda s: encode_parity(s, plan))(shards), dtype=np.uint64)
+print(f"parity encode: {time.time() - t0:.2f}s "
+      f"(modelled ICI time {CostModel().time(plan.c1, counted_c2(plan.ps_plan), shards.shape[1]) * 1e3:.2f} ms)")
+
+sn = np.asarray(shards, dtype=np.uint64)
+for n_lost in (1, 4, 8):
+    lost = list(rng.choice(K, size=n_lost, replace=False))
+    t0 = time.time()
+    rec = recover_lost(
+        plan, lost,
+        {k: sn[k] for k in range(K) if k not in lost},
+        {k: parity[k] for k in range(K) if k not in lost},
+    )
+    ok = all(np.array_equal(rec[k], sn[k]) for k in lost)
+    print(f"lost {n_lost:2d} replicas {sorted(lost)}: recovered bit-exact={ok} in {time.time() - t0:.2f}s")
+
+full = sn.copy()
+back = unshard_state_limbs(jnp.asarray(full.astype(np.uint32)), meta)
+assert all(np.array_equal(np.asarray(a), np.asarray(b)) for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(state)))
+print("full state reassembly: bit-exact")

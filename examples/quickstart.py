@@ -1,0 +1,37 @@
+"""Quickstart: all-to-all encode in 30 lines.
+
+Every one of K=16 processors holds a packet; each wants a distinct linear
+combination (a column of A). The universal prepare-and-shoot algorithm does
+it in C1 = ⌈log2 K⌉ = 4 rounds moving C2 = 6 elements per port — vs 15 for
+an all-gather.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import CostModel, Field, M31, a2a_encode, plan_for
+from repro.core.matrices import random_matrix, random_vector
+from repro.core.prepare_shoot import encode_oracle
+
+K = 16
+f = Field(M31)
+
+A = random_matrix(f, K, seed=0)  # ANY matrix — the universal promise
+x = random_vector(f, K, seed=1)
+
+out, report = a2a_encode(jnp.asarray(x.astype(np.uint32)), jnp.asarray(A.astype(np.uint32)), p=1)
+
+assert np.array_equal(np.asarray(out, dtype=np.uint64), encode_oracle(x, A))
+print(f"algorithm      : {report.algorithm}")
+print(f"rounds C1      : {report.c1}   (lower bound {report.c1_lower} — optimal: {report.c1_optimal})")
+print(f"elements C2    : {report.c2}   (vs all-gather baseline {K - 1})")
+print(f"modelled time  : {report.time * 1e6:.2f} µs on v5e ICI (β=1µs, τ=4B/50GBps)")
+
+# structured matrices get the specific algorithms (exponentially better C2):
+plan = plan_for("dft", K, p=1, q=2013265921)
+xq = random_vector(Field(2013265921), K, seed=2)
+out2, report2 = a2a_encode(jnp.asarray(xq.astype(np.uint32)), plan=plan)
+print(f"\nDFT butterfly  : C1 = C2 = {report2.c2} (strictly optimal, Theorem 2)")

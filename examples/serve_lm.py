@@ -1,0 +1,46 @@
+"""Batched serving demo: build a small model, generate with the batched
+engine (greedy + sampled), print throughput.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+
+from repro.configs import get
+from repro.models import build_model
+from repro.serve import Engine
+
+
+def main():
+    cfg = get("qwen3-1.7b").replace(
+        name="qwen3-serve-demo",
+        n_layers=4,
+        d_model=256,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=64,
+        d_ff=768,
+        vocab_size=32768,
+        vocab_padded=0,
+        remat="none",
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = Engine(model, params, max_len=128)
+
+    prompts = [[1, 5, 9, 2], [7, 7, 7], [42], [3, 1, 4, 1, 5, 9, 2, 6]]
+    t0 = time.time()
+    res = eng.generate(prompts, max_new_tokens=24)
+    dt = time.time() - t0
+    print(f"batch of {len(prompts)} prompts, {res.steps} decode steps in {dt:.2f}s "
+          f"({res.steps * len(prompts) / dt:.1f} tok/s incl. compile)")
+    for i, row in enumerate(res.tokens):
+        print(f"  seq {i}: {row[:16].tolist()} …")
+    res2 = eng.generate(prompts, max_new_tokens=24, greedy=False, seed=7)
+    print("sampled variant differs:", not (res.tokens == res2.tokens).all())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""End-to-end training driver: ~100M-param qwen3-family model, a few hundred
+steps on the synthetic pipeline, with coded fault-tolerance active —
+a Cauchy parity snapshot of (params, opt state) every 25 steps, a simulated
+3-node failure at step 60 recovered bit-exactly from survivors, and a disk
+checkpoint at the end.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get
+from repro.models import build_model
+from repro.train import (
+    CodedStateGuard,
+    OptConfig,
+    SyntheticLM,
+    init_state,
+    make_train_step,
+    save_checkpoint,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--fail-at", type=int, default=60)
+    ap.add_argument("--coded-every", type=int, default=50)
+    args = ap.parse_args()
+
+    # ~110M params: qwen3 family, reduced depth/width, full qk-norm/GQA/tied-emb
+    cfg = get("qwen3-1.7b").replace(
+        name="qwen3-110m",
+        n_layers=12,
+        d_model=768,
+        n_heads=12,
+        n_kv_heads=6,
+        head_dim=64,
+        d_ff=2304,
+        vocab_size=32768,
+        vocab_padded=0,
+        remat="none",
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"model: {cfg.name}, {n_params / 1e6:.1f}M params")
+
+    ocfg = OptConfig(lr=6e-4, warmup_steps=20, total_steps=args.steps)
+    opt_state = init_state(ocfg, params)
+    step_fn = jax.jit(make_train_step(model, ocfg))
+    ds = SyntheticLM(cfg)
+    guard = CodedStateGuard(K=8)
+
+    t0 = time.time()
+    for s in range(args.steps):
+        batch = ds.batch(s, args.batch, args.seq)
+        params, opt_state, metrics = step_fn(
+            params, opt_state, {k: jnp.asarray(v) for k, v in batch.items()}
+        )
+        if s % args.coded_every == 0:
+            guard.snapshot({"params": params, "opt": opt_state}, step=s)
+            print(
+                f"step {s:4d}  loss {float(metrics['loss']):.4f}  "
+                f"gnorm {float(metrics['grad_norm']):.3f}  lr {float(metrics['lr']):.2e}  "
+                f"[coded parity snapshot: C1={guard.plan.c1} rounds]"
+            )
+        if s == args.fail_at:
+            print(f"step {s:4d}  !! simulating loss of replicas {{1, 4, 6}} …")
+            state, at = guard.fail_and_recover(lost=[1, 4, 6])
+            params, opt_state = state["params"], state["opt"]
+            print(f"           recovered bit-exactly from snapshot at step {at}; resuming")
+    dt = time.time() - t0
+    print(f"\n{args.steps} steps in {dt:.1f}s ({args.steps / dt:.2f} steps/s)")
+    save_checkpoint("results/ckpt_train_lm", {"params": params, "opt": opt_state}, args.steps)
+    print("final checkpoint: results/ckpt_train_lm")
+
+
+if __name__ == "__main__":
+    main()

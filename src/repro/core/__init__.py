@@ -1,0 +1,23 @@
+# The paper's primary contribution: the all-to-all encode collective
+# (Wang & Raviv, "All-to-All Encode in Synchronous Systems", 2022).
+#
+# - field.py          GF(q) arithmetic: exact host tier + uint32-only device tier
+# - matrices.py       Vandermonde / DFT / Lagrange generator constructions
+# - schedule.py       static round schedules (prepare/shoot, butterfly, draw/loose)
+# - bounds.py         Lemmas 1-2 lower bounds, Theorems 1-4 closed forms, cost model
+# - simulator.py      cost-exact synchronous p-port network simulator
+# - prepare_shoot.py  universal algorithm, array-level jnp executor
+# - draw_loose.py     specific algorithms (butterfly, draw-and-loose, Lagrange)
+# - encode.py         public a2a_encode API with auto-selection
+
+from .bounds import CostModel  # noqa: F401
+from .encode import CostReport, a2a_encode, default_q_for, plan_for, rs_generator  # noqa: F401
+from .field import M31, NTT, Field  # noqa: F401
+from .schedule import (  # noqa: F401
+    ButterflyPlan,
+    DrawLoosePlan,
+    PrepareShootPlan,
+    plan_butterfly,
+    plan_draw_loose,
+    plan_prepare_shoot,
+)

@@ -1,0 +1,161 @@
+"""Array-level (jnp) executors for the specific algorithms (§V, §VI):
+
+* radix-(p+1) DFT butterfly (forward + inverse) — Theorems 2, Lemma 5
+* draw-and-loose for general Vandermonde matrices — Theorem 3, Lemma 6
+* Lagrange matrices via inverse-Vandermonde ∘ forward-Vandermonde — Theorem 4
+
+All twiddles/coefficients are schedule constants with Shoup duals (uint32-only
+products). ``jnp.take`` with the per-round digit-group permutations is the
+local stand-in for the mesh ``ppermute`` (see dist/collectives.py).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from .field import Field, madd, shoup_mul
+from .schedule import (
+    ButterflyPlan,
+    DrawLoosePlan,
+    butterfly_group_perms,
+    plan_butterfly,
+    plan_draw_loose,
+)
+from .prepare_shoot import encode_universal
+
+
+def _bcast(coef, npay):
+    return coef.reshape(coef.shape + (1,) * npay)
+
+
+def butterfly_apply(
+    v: jnp.ndarray, plan: ButterflyPlan, inverse: bool = False
+) -> jnp.ndarray:
+    """v: (K, *payload) uint32 → out[k] = Σ_j v_{rev(j)} β^{jk} (forward).
+
+    Round t: out[k] = Σ_ρ tw[k, ρ] · v[k with digit_t = ρ]  (Eq. 9/10).
+    """
+    K, radix, H, q = plan.K, plan.radix, plan.H, plan.q
+    npay = v.ndim - 1
+    rounds = range(H - 1, -1, -1) if inverse else range(H)
+    step_pow = [radix**t for t in range(H)]
+    k = np.arange(K)
+    for t in rounds:
+        tw = plan.inv_twiddles[t] if inverse else plan.twiddles[t]
+        tw_sh = plan.inv_twiddles_shoup[t] if inverse else plan.twiddles_shoup[t]
+        step = step_pow[t]
+        digit = (k // step) % radix
+        acc = None
+        for rho in range(radix):
+            src = k + (rho - digit) * step  # k with digit_t replaced by rho
+            term = shoup_mul(
+                jnp.take(v, jnp.asarray(src), axis=0),
+                _bcast(jnp.asarray(tw[:, rho]), npay),
+                _bcast(jnp.asarray(tw_sh[:, rho]), npay),
+                q,
+            )
+            acc = term if acc is None else madd(acc, term, q)
+        v = acc
+    return v
+
+
+def encode_dft(x: jnp.ndarray, plan: ButterflyPlan) -> jnp.ndarray:
+    """Computes x @ G with G = D_K[rev, :] (butterfly_target_matrix)."""
+    return butterfly_apply(x, plan)
+
+
+def decode_dft(y: jnp.ndarray, plan: ButterflyPlan) -> jnp.ndarray:
+    """Inverse of encode_dft (Lemma 5), same C1 = C2 = H."""
+    return butterfly_apply(y, plan, inverse=True)
+
+
+def encode_draw_loose(x: jnp.ndarray, plan: DrawLoosePlan) -> jnp.ndarray:
+    """Computes x @ G with G = Vandermonde(points)[source_perm, :]
+    (draw_loose_target_matrix). x: (K, *payload)."""
+    K, M, Z, q = plan.K, plan.M, plan.Z, plan.q
+    payload = x.shape[1:]
+    npay = len(payload)
+    v = x.reshape(M, Z, *payload)  # processor j + Z*i → [i, j]
+
+    # ---- draw: Z parallel M×M prepare-and-shoots (batched over j) ---------
+    if plan.draw_plan is not None:
+        # treat (Z, *payload) as the payload of an M-processor encode
+        F = encode_universal(v, plan.draw_matrix, p=plan.p, q=q, plan=plan.draw_plan)
+    else:
+        F = v
+    # local scale α_i^{rev(j)} (no communication)
+    scale = plan.local_scale.reshape(M, Z)
+    scale_sh = plan.local_scale_shoup.reshape(M, Z)
+    F = shoup_mul(
+        F, _bcast(jnp.asarray(scale), npay), _bcast(jnp.asarray(scale_sh), npay), q
+    )
+
+    # ---- loose: M parallel Z-point butterflies (batched over i) -----------
+    if plan.loose_plan is not None:
+        Ft = jnp.moveaxis(F, 0, 1)  # (Z, M, *payload)
+        out = butterfly_apply(Ft, plan.loose_plan)
+        out = jnp.moveaxis(out, 1, 0)
+    else:
+        out = F
+    return out.reshape(K, *payload)
+
+
+def decode_draw_loose(y: jnp.ndarray, plan: DrawLoosePlan) -> jnp.ndarray:
+    """Inverse of encode_draw_loose (Lemma 6): inverse butterfly, divide the
+    local scale, then prepare-and-shoot with the INVERSE draw matrix."""
+    K, M, Z, q = plan.K, plan.M, plan.Z, plan.q
+    payload = y.shape[1:]
+    npay = len(payload)
+    f = Field(q)
+    v = y.reshape(M, Z, *payload)
+    if plan.loose_plan is not None:
+        vt = jnp.moveaxis(v, 0, 1)
+        vt = butterfly_apply(vt, plan.loose_plan, inverse=True)
+        v = jnp.moveaxis(vt, 1, 0)
+    inv_scale = f.inv(plan.local_scale.astype(np.uint64)).astype(np.uint32)
+    from .field import shoup_precompute
+
+    v = shoup_mul(
+        v,
+        _bcast(jnp.asarray(inv_scale.reshape(M, Z)), npay),
+        _bcast(jnp.asarray(shoup_precompute(inv_scale, q).reshape(M, Z)), npay),
+        q,
+    )
+    if plan.draw_plan is not None:
+        Vinv = f.inv_matrix(plan.draw_matrix)
+        v = encode_universal(v, Vinv, p=plan.p, q=q, plan=plan.draw_plan)
+    return v.reshape(K, *payload)
+
+
+def encode_lagrange(
+    x: jnp.ndarray, plan_omega: DrawLoosePlan, plan_alpha: DrawLoosePlan
+) -> jnp.ndarray:
+    """Theorem 4: processors hold point-values f(ω'_k) of an implicit degree-
+    (K-1) polynomial (ω' = plan_omega.points); each obtains f(α'_k)
+    (α' = plan_alpha.points). The source permutations of the two plans cancel
+    (same K, p, q ⇒ same digit-reversal), so the composite computes the TRUE
+    Lagrange matrix lagrange_matrix(field, plan_alpha.points, plan_omega.points).
+    """
+    if (plan_omega.K, plan_omega.p, plan_omega.q) != (
+        plan_alpha.K,
+        plan_alpha.p,
+        plan_alpha.q,
+    ):
+        raise ValueError("plans must share (K, p, q)")
+    coeffs = decode_draw_loose(x, plan_omega)
+    return encode_draw_loose(coeffs, plan_alpha)
+
+
+__all__ = [
+    "butterfly_apply",
+    "encode_dft",
+    "decode_dft",
+    "encode_draw_loose",
+    "decode_draw_loose",
+    "encode_lagrange",
+    "plan_butterfly",
+    "plan_draw_loose",
+    "butterfly_group_perms",
+]

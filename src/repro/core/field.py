@@ -1,0 +1,403 @@
+"""Finite-field arithmetic for all-to-all encode.
+
+Two concrete primes (DESIGN.md §3):
+
+* ``M31 = 2**31 - 1`` — Mersenne; default storage-code field (reduction is
+  two shift-adds).
+* ``NTT = 15 * 2**27 + 1 = 2013265921`` — 2-adic valuation 27, so radix-2
+  DFT subgroups (butterflies) exist for any power-of-two encode-axis size
+  up to ``2**27``.
+
+Two implementation tiers:
+
+* **Host tier** (numpy ``uint64``): exact 62-bit products, used for matrix
+  construction, schedule/twiddle precomputation, decoding and the cost-exact
+  synchronous-network simulator.
+* **Device tier** (``jnp`` ``uint32`` only): every product goes through
+  16-bit limb decomposition so identical code lowers for TPU (no 64-bit
+  multiplier on the VPU/MXU fast path) and runs inside Pallas kernel bodies.
+  The device tier never creates a 64-bit value.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax.numpy as jnp
+
+M31 = (1 << 31) - 1  # 2147483647
+NTT = 15 * (1 << 27) + 1  # 2013265921
+
+_MASK31 = np.uint64(M31)
+
+# q - 1 factorizations (verified in tests) — needed for primitive-root checks.
+_GROUP_FACTORS = {
+    M31: (2, 3, 7, 11, 31, 151, 331),
+    NTT: (2, 3, 5),
+}
+
+# Standard generators of the multiplicative groups (verified in tests).
+_GENERATORS = {M31: 7, NTT: 31}
+
+__all__ = [
+    "M31",
+    "NTT",
+    "Field",
+    "madd",
+    "msub",
+    "mneg",
+    "mmul_m31",
+    "umulhi32",
+    "barrett32",
+    "shoup_precompute",
+    "shoup_mul",
+    "mmul",
+    "two_adic_valuation",
+    "radix_valuation",
+]
+
+
+# --------------------------------------------------------------------------
+# Host tier: exact numpy uint64 field arithmetic
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Field:
+    """GF(q) for a prime q < 2**31, exact host-side arithmetic.
+
+    All array arguments are numpy arrays (or python ints) of nonnegative
+    integers; results are canonical representatives in ``[0, q)`` as
+    ``uint64``.
+    """
+
+    q: int = M31
+
+    def __post_init__(self):
+        if not (2 < self.q < (1 << 31)):
+            raise ValueError(f"q={self.q} out of supported range (3, 2^31)")
+
+    # -- element ops -------------------------------------------------------
+    def asarray(self, x) -> np.ndarray:
+        a = np.asarray(x, dtype=np.uint64)
+        return a % np.uint64(self.q)
+
+    def add(self, a, b):
+        return (self.asarray(a) + self.asarray(b)) % np.uint64(self.q)
+
+    def sub(self, a, b):
+        return (self.asarray(a) + np.uint64(self.q) - self.asarray(b)) % np.uint64(self.q)
+
+    def neg(self, a):
+        return (np.uint64(self.q) - self.asarray(a)) % np.uint64(self.q)
+
+    def mul(self, a, b):
+        # products of two < 2^31 values fit in 62 bits < uint64.
+        return (self.asarray(a) * self.asarray(b)) % np.uint64(self.q)
+
+    def pow(self, a, e) -> np.ndarray:
+        """Element-wise a**e mod q (e: python int or int array >= 0)."""
+        a = self.asarray(a)
+        e_arr = np.broadcast_arrays(np.asarray(e, dtype=np.int64), a.astype(np.int64))[0].copy()
+        result = np.ones_like(a)
+        base = a.copy()
+        e_work = e_arr.astype(np.uint64).copy()
+        while np.any(e_work > 0):
+            odd = (e_work & np.uint64(1)).astype(bool)
+            result = np.where(odd, self.mul(result, base), result)
+            e_work >>= np.uint64(1)
+            if np.any(e_work > 0):
+                base = self.mul(base, base)
+        return result
+
+    def inv(self, a) -> np.ndarray:
+        """Element-wise multiplicative inverse (Fermat)."""
+        a = self.asarray(a)
+        if np.any(a == 0):
+            raise ZeroDivisionError("inverse of 0 in GF(q)")
+        return self.pow(a, self.q - 2)
+
+    # -- linear algebra ----------------------------------------------------
+    def matmul(self, A, B) -> np.ndarray:
+        """Exact (A @ B) mod q. Blocks the contraction so uint64 never overflows.
+
+        Each product < q^2 < 2^62; we can add up to 3 such terms within
+        uint64 (2^64 / 2^62 = 4), so reduce every 3 accumulands.
+        """
+        A = self.asarray(A)
+        B = self.asarray(B)
+        if A.ndim == 1:
+            A = A[None, :]
+            squeeze = True
+        else:
+            squeeze = False
+        n = A.shape[-1]
+        q = np.uint64(self.q)
+        out = np.zeros((*A.shape[:-1], B.shape[-1]), dtype=np.uint64)
+        step = 3
+        for s in range(0, n, step):
+            chunk = np.einsum(
+                "...k,kj->...j", A[..., s : s + step], B[s : s + step], dtype=np.uint64
+            )
+            out = (out + chunk % q) % q
+        return out[0] if squeeze else out
+
+    def solve(self, A, b) -> np.ndarray:
+        """Solve A x = b mod q by Gaussian elimination (A square invertible)."""
+        A = self.asarray(A).copy()
+        b = self.asarray(b).copy()
+        n = A.shape[0]
+        if b.ndim == 1:
+            b = b[:, None]
+            squeeze = True
+        else:
+            squeeze = False
+        q = np.uint64(self.q)
+        for col in range(n):
+            piv_candidates = np.nonzero(A[col:, col])[0]
+            if piv_candidates.size == 0:
+                raise np.linalg.LinAlgError("singular matrix over GF(q)")
+            piv = col + int(piv_candidates[0])
+            if piv != col:
+                A[[col, piv]] = A[[piv, col]]
+                b[[col, piv]] = b[[piv, col]]
+            inv_p = self.inv(A[col, col])
+            A[col] = self.mul(A[col], inv_p)
+            b[col] = self.mul(b[col], inv_p)
+            for row in range(n):
+                if row != col and A[row, col] != 0:
+                    factor = A[row, col]
+                    A[row] = (A[row] + (q - factor) * A[col] % q) % q
+                    b[row] = (b[row] + (q - factor) * b[col] % q) % q
+        x = b
+        return x[:, 0] if squeeze else x
+
+    def inv_matrix(self, A) -> np.ndarray:
+        A = self.asarray(A)
+        return self.solve(A, np.eye(A.shape[0], dtype=np.uint64))
+
+    # -- group structure ---------------------------------------------------
+    @property
+    def generator(self) -> int:
+        if self.q in _GENERATORS:
+            return _GENERATORS[self.q]
+        return self._find_generator()
+
+    def _find_generator(self) -> int:
+        factors = self._factor_group_order()
+        order = self.q - 1
+        for g in range(2, self.q):
+            if all(pow(g, order // f, self.q) != 1 for f in factors):
+                return g
+        raise RuntimeError("no generator found (q not prime?)")
+
+    def _factor_group_order(self):
+        if self.q in _GROUP_FACTORS:
+            return _GROUP_FACTORS[self.q]
+        n = self.q - 1
+        factors = []
+        d = 2
+        while d * d <= n:
+            if n % d == 0:
+                factors.append(d)
+                while n % d == 0:
+                    n //= d
+            d += 1
+        if n > 1:
+            factors.append(n)
+        return tuple(factors)
+
+    def root_of_unity(self, n: int) -> int:
+        """A primitive n-th root of unity; requires n | q-1."""
+        if (self.q - 1) % n != 0:
+            raise ValueError(f"{n} does not divide q-1={self.q - 1}")
+        beta = pow(self.generator, (self.q - 1) // n, self.q)
+        return beta
+
+
+def two_adic_valuation(n: int) -> int:
+    v = 0
+    while n % 2 == 0:
+        n //= 2
+        v += 1
+    return v
+
+
+def radix_valuation(n: int, r: int) -> int:
+    """Largest h with r**h | n."""
+    v = 0
+    while n % r == 0:
+        n //= r
+        v += 1
+    return v
+
+
+# --------------------------------------------------------------------------
+# Device tier: uint32-only modular arithmetic (jnp; also valid inside Pallas)
+# --------------------------------------------------------------------------
+#
+# Everything below uses only uint32 add/sub/mul/shift, with documented
+# no-overflow ranges, so it lowers to TPU (and Pallas) without 64-bit ints.
+
+
+def _u32(x):
+    return jnp.asarray(x, dtype=jnp.uint32)
+
+
+def madd(a, b, q: int):
+    """(a + b) mod q for canonical a, b < q < 2^31. Sum < 2^32: no overflow."""
+    s = _u32(a) + _u32(b)
+    return jnp.where(s >= q, s - jnp.uint32(q), s)
+
+
+def msub(a, b, q: int):
+    """(a - b) mod q for canonical a, b < q."""
+    a = _u32(a)
+    b = _u32(b)
+    return jnp.where(a >= b, a - b, a + (jnp.uint32(q) - b))
+
+
+def mneg(a, q: int):
+    a = _u32(a)
+    return jnp.where(a == 0, a, jnp.uint32(q) - a)
+
+
+def _limbs(a):
+    a = _u32(a)
+    return a >> jnp.uint32(16), a & jnp.uint32(0xFFFF)
+
+
+def umulhi32(a, b):
+    """High 32 bits of the 64-bit product a*b, for BOTH a, b < 2^31.
+
+    Derivation (all uint32, no overflow):
+      a = a1*2^16 + a0 with a1 < 2^15;  b = b1*2^16 + b0 with b1 < 2^15
+      m0 = a0*b0 < 2^32;  m1 = a0*b1 + a1*b0 <= 2*(2^16-1)(2^15-1) < 2^32
+      full = m2*2^32 + m1*2^16 + m0;  w = m1 + (m0 >> 16) < 2^32
+      hi = m2 + (w >> 16)   (exact: (w & 0xffff)*2^16 + (m0 & 0xffff) < 2^32)
+    For operands that may reach 2^32 use :func:`umulhi32_full`.
+    """
+    a1, a0 = _limbs(a)
+    b1, b0 = _limbs(b)
+    m0 = a0 * b0
+    m1 = a0 * b1 + a1 * b0
+    m2 = a1 * b1
+    w = m1 + (m0 >> jnp.uint32(16))
+    return m2 + (w >> jnp.uint32(16))
+
+
+def mmul_m31(a, b):
+    """(a * b) mod M31 for canonical a, b < M31, uint32-only.
+
+    Uses 2^31 ≡ 1 (mod M31). With m0/m1/m2 the 16-bit-limb partial products:
+      full = m2*2^32 + m1*2^16 + m0
+      m2*2^32 ≡ 2*m2;  m1*2^16 = (m1>>15)*2^31 + (m1&0x7fff)*2^16
+                       ≡ (m1>>15) + (m1&0x7fff)*2^16
+      m0 ≡ (m0>>31) + (m0 & M31)
+    Each grouped partial sum stays < 2^32 (ranges in comments).
+    """
+    a1, a0 = _limbs(a)
+    b1, b0 = _limbs(b)
+    m0 = a0 * b0  # < 2^32
+    m1 = a0 * b1 + a1 * b0  # < 2^32 (a1,b1 < 2^15)
+    m2 = a1 * b1  # < 2^30
+    q = jnp.uint32(M31)
+    # u = 2*m2 + (m1 >> 15) + (m0 >> 31)  < 2^31 + 2^17 + 1  < 2^32
+    u = (m2 << jnp.uint32(1)) + (m1 >> jnp.uint32(15)) + (m0 >> jnp.uint32(31))
+    # v = (m1 & 0x7fff) * 2^16 + (m0 & M31)  < 2^31 + 2^31 = 2^32 (just fits)
+    v = ((m1 & jnp.uint32(0x7FFF)) << jnp.uint32(16)) + (m0 & q)
+    # fold each of u, v once: x ≡ (x >> 31) + (x & M31), result <= 2^31
+    u = (u >> jnp.uint32(31)) + (u & q)
+    v = (v >> jnp.uint32(31)) + (v & q)
+    u = jnp.where(u >= q, u - q, u)  # < M31
+    v = jnp.where(v >= q, v - q, v)  # < M31
+    s = u + v  # < 2^32
+    return jnp.where(s >= q, s - q, s)
+
+
+def shoup_precompute(c, q: int) -> np.ndarray:
+    """Host-side: c' = floor(c * 2^32 / q) for constant multiplicand c < q."""
+    c = np.asarray(c, dtype=np.uint64)
+    return ((c << np.uint64(32)) // np.uint64(q)).astype(np.uint32)
+
+
+def shoup_mul(a, c, c_pre, q: int):
+    """(a * c) mod q with Shoup-precomputed c' = floor(c*2^32/q).
+
+    t = floor(a * c' / 2^32) satisfies floor(a*c/q) - 1 <= t <= floor(a*c/q),
+    so r = a*c - t*q ∈ [0, 2q), computed with wrapping uint32 (exact because
+    the true r < 2q < 2^32). c' can reach 2^32 so the carry-safe umulhi is
+    required.
+    """
+    a = _u32(a)
+    c = _u32(c)
+    c_pre = _u32(c_pre)
+    t = umulhi32_full(a, c_pre)
+    r = a * c - t * jnp.uint32(q)  # wrapping arithmetic; true value < 2q
+    return jnp.where(r >= q, r - jnp.uint32(q), r)
+
+
+@functools.lru_cache(maxsize=None)
+def _barrett_consts(q: int):
+    m = ((1 << 32) // q) & 0xFFFFFFFF  # floor(2^32/q); q > 2 so fits uint32
+    r16 = (1 << 16) % q
+    r32 = (1 << 32) % q
+    r16_pre = int(shoup_precompute(r16, q))
+    r32_pre = int(shoup_precompute(r32, q))
+    return m, r16, r32, r16_pre, r32_pre
+
+
+def barrett32(x, q: int):
+    """x mod q for any uint32 x (q < 2^31): one Barrett step + one csub.
+
+    t = floor(x * floor(2^32/q) / 2^32) >= floor(x/q) - 1, so r = x - t*q
+    ∈ [0, 2q) < 2^32.
+    """
+    m, *_ = _barrett_consts(q)
+    x = _u32(x)
+    t = umulhi32_full(x, jnp.uint32(m))
+    r = x - t * jnp.uint32(q)
+    return jnp.where(r >= q, r - jnp.uint32(q), r)
+
+
+def umulhi32_full(a, b):
+    """High 32 bits of a*b for ANY uint32 a, b (handles m1 carry).
+
+    m1 = a0*b1 + a1*b0 can overflow uint32 when both a1, b1 >= 2^15; compute
+    the two cross terms separately and propagate carries explicitly.
+    """
+    a = _u32(a)
+    b = _u32(b)
+    a1, a0 = _limbs(a)
+    b1, b0 = _limbs(b)
+    m0 = a0 * b0
+    c1 = a0 * b1  # < 2^32
+    c2 = a1 * b0  # < 2^32
+    m2 = a1 * b1
+    w = c1 + (m0 >> jnp.uint32(16))  # < 2^32 (c1 <= (2^16-1)^2)
+    carry = jnp.where(w > (jnp.uint32(0xFFFFFFFF) - c2), jnp.uint32(1), jnp.uint32(0))
+    w = w + c2  # wrapping; carry tracked above
+    return m2 + (w >> jnp.uint32(16)) + (carry << jnp.uint32(16))
+
+
+def mmul(a, b, q: int):
+    """(a * b) mod q for canonical a, b < q, any prime q < 2^31, uint32-only.
+
+    Fast path for Mersenne-31; otherwise 16-bit-limb schoolbook with Barrett
+    folds and Shoup multiplies by the constants 2^16 mod q and 2^32 mod q.
+    """
+    if q == M31:
+        return mmul_m31(a, b)
+    _, r16, r32, r16_pre, r32_pre = _barrett_consts(q)
+    a1, a0 = _limbs(a)
+    b1, b0 = _limbs(b)
+    m0 = a0 * b0
+    m1 = a0 * b1 + a1 * b0  # a,b < q < 2^31 so a1,b1 < 2^15: fits (see mmul_m31)
+    m2 = a1 * b1
+    t0 = barrett32(m0, q)
+    t1 = shoup_mul(barrett32(m1, q), jnp.uint32(r16), jnp.uint32(r16_pre), q)
+    t2 = shoup_mul(barrett32(m2, q), jnp.uint32(r32), jnp.uint32(r32_pre), q)
+    return madd(madd(t0, t1, q), t2, q)

@@ -1,0 +1,244 @@
+"""Cost-exact synchronous p-port network simulator (paper §I model).
+
+Independent host-side re-implementation of the algorithms via explicit
+message passing: every round is validated against the p-port constraints
+(each processor sends ≤ p and receives ≤ p messages, one per port, no
+self-messages) and C1/C2 are counted exactly as defined:
+
+    C1 = number of rounds
+    C2 = Σ_t max_{messages m in round t} len(m)     (field elements)
+
+This is what EXPERIMENTS.md's paper-claims tables are produced from; the
+array-level jnp executors in ``prepare_shoot.py`` / ``draw_loose.py`` are
+cross-checked against both this simulator and the matrix oracle.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field as dc_field
+
+import numpy as np
+
+from .field import Field
+from .schedule import (
+    ButterflyPlan,
+    DrawLoosePlan,
+    PrepareShootPlan,
+    butterfly_group_perms,
+)
+
+
+@dataclass
+class SimStats:
+    K: int
+    p: int
+    C1: int = 0
+    C2: int = 0
+    round_sizes: list = dc_field(default_factory=list)
+    total_elements: int = 0  # Σ over all messages (not just max) — extra info
+
+
+class SyncSimulator:
+    """Executes one communication round at a time, enforcing the model."""
+
+    def __init__(self, K: int, p: int):
+        self.stats = SimStats(K=K, p=p)
+
+    def exchange(self, messages: dict) -> dict:
+        """messages: {(src, dst): list_of_elements}. Returns them 'delivered'.
+
+        Empty rounds are not allowed (the model counts a round only when
+        communication happens; algorithms never schedule empty rounds).
+        """
+        K, p = self.stats.K, self.stats.p
+        if not messages:
+            raise ValueError("empty communication round")
+        out_count: dict[int, int] = {}
+        in_count: dict[int, int] = {}
+        for (src, dst), payload in messages.items():
+            if src == dst:
+                raise ValueError(f"self-message at processor {src}")
+            if not (0 <= src < K and 0 <= dst < K):
+                raise ValueError("processor index out of range")
+            if len(payload) == 0:
+                raise ValueError("empty message")
+            out_count[src] = out_count.get(src, 0) + 1
+            in_count[dst] = in_count.get(dst, 0) + 1
+        if max(out_count.values()) > p:
+            raise ValueError(f"a processor sends more than p={p} messages")
+        if max(in_count.values()) > p:
+            raise ValueError(f"a processor receives more than p={p} messages")
+        d = max(len(v) for v in messages.values())
+        self.stats.C1 += 1
+        self.stats.C2 += d
+        self.stats.round_sizes.append(d)
+        self.stats.total_elements += sum(len(v) for v in messages.values())
+        return messages
+
+
+# ---------------------------------------------------------------------------
+# prepare-and-shoot on the simulator (§IV, Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+def simulate_prepare_shoot(
+    x: np.ndarray, A: np.ndarray, plan: PrepareShootPlan, field: Field
+) -> tuple[np.ndarray, SimStats]:
+    """x: (K,) uint64, A: (K,K) uint64 over ``field``. Returns (x̃, stats)."""
+    K, p, m, n = plan.K, plan.p, plan.m, plan.n
+    sim = SyncSimulator(K, p)
+    x = field.asarray(x)
+    A = field.asarray(A)
+
+    # ---- prepare: every processor forwards its whole storage each round ----
+    # (shifts that collapse mod K — only in the K <= p+1 regime — are
+    # skipped: a self-send or duplicate-destination send carries no info)
+    storage: list[dict[int, np.uint64]] = [{k: x[k]} for k in range(K)]
+    for shifts in plan.prepare_shifts:
+        msgs = {}
+        for k in range(K):
+            items = sorted(storage[k].items())
+            for s in shifts:
+                dst = (k + s) % K
+                if dst != k:
+                    msgs[(k, dst)] = items
+        delivered = sim.exchange(msgs)
+        for (src, dst), items in delivered.items():
+            for r, val in items:
+                storage[dst][r] = val
+    # every processor k now holds x_r for r ∈ R_k^- (as a set)
+    for k in range(K):
+        expect = {(k - l) % K for l in range(m)}
+        assert set(storage[k]) == expect, f"prepare coverage wrong at {k}"
+
+    # ---- shoot: initialize w_{k, k+l·m} with the first-coverage mask -------
+    # (keep contribution of offset u toward variable l iff l*m + u < K;
+    #  exact for all K, p — see schedule.coeff_mask / DESIGN §11)
+    w: list[dict[int, np.uint64]] = []
+    for k in range(K):
+        wk = {}
+        for l in range(n):
+            col = (k + l * m) % K
+            acc = np.uint64(0)
+            for u in range(m):
+                if l * m + u < K:
+                    r = (k - u) % K
+                    acc = field.add(acc, field.mul(storage[k][r], A[r, col]))
+            wk[l] = acc
+        w.append(wk)
+
+    radix = p + 1
+    n_live = -(-K // m)  # slots l with l*m >= K are all-zero: never sent
+    for t, shifts in enumerate(plan.shoot_shifts, start=1):
+        stride = radix ** (t - 1)
+        msgs = {}
+        for k in range(K):
+            for rho, s in enumerate(shifts, start=1):
+                dst = (k + s) % K
+                ls = [
+                    l
+                    for l in range(n_live)
+                    if (l // stride) % radix == rho and l % stride == 0
+                ]
+                if ls:
+                    msgs[(k, dst)] = [(l, w[k][l]) for l in ls]
+        delivered = sim.exchange(msgs)
+        for (src, dst), items in delivered.items():
+            for l, val in items:
+                lp = l - ((l // stride) % radix) * stride
+                w[dst][lp] = field.add(w[dst][lp], val)
+
+    out = np.array([w[k][0] for k in range(K)], dtype=np.uint64)
+    return out, sim.stats
+
+
+# ---------------------------------------------------------------------------
+# DFT butterfly on the simulator (§V-A)
+# ---------------------------------------------------------------------------
+
+
+def simulate_butterfly(
+    v: np.ndarray, plan: ButterflyPlan, field: Field, inverse: bool = False
+) -> tuple[np.ndarray, SimStats]:
+    """Round t: every processor broadcasts its Q to the p digit-t partners
+    and combines the radix received values (own + p) with the twiddle row."""
+    K, p, H, radix = plan.K, plan.p, plan.H, plan.radix
+    sim = SyncSimulator(K, p)
+    q = field.asarray(v).copy()
+    rounds = range(H - 1, -1, -1) if inverse else range(H)
+    for t in rounds:
+        perms = butterfly_group_perms(K, radix, t)
+        msgs = {}
+        for k in range(K):
+            for dst_map in perms:
+                msgs[(k, int(dst_map[k]))] = [q[k]]
+        delivered = sim.exchange(msgs)
+        received = {k: {} for k in range(K)}
+        step = radix**t
+        for k in range(K):
+            received[k][(k // step) % radix] = q[k]
+        for (src, dst), payload in delivered.items():
+            received[dst][(src // step) % radix] = payload[0]
+        tw = plan.inv_twiddles[t] if inverse else plan.twiddles[t]
+        new_q = np.zeros_like(q)
+        for k in range(K):
+            acc = np.uint64(0)
+            for rho in range(radix):
+                acc = field.add(acc, field.mul(np.uint64(tw[k, rho]), received[k][rho]))
+            new_q[k] = acc
+        q = new_q
+    return q, sim.stats
+
+
+# ---------------------------------------------------------------------------
+# draw-and-loose on the simulator (§V-B) — subgroup composition
+# ---------------------------------------------------------------------------
+
+
+def simulate_draw_loose(
+    x: np.ndarray, plan: DrawLoosePlan, field: Field
+) -> tuple[np.ndarray, SimStats]:
+    """Runs the draw phase (Z parallel M-sized prepare-and-shoots, merged
+    round-by-round so port constraints are checked globally) then the loose
+    phase (M parallel Z-point butterflies). For simplicity each sub-phase is
+    simulated on its own simulator and the stats are combined — the parallel
+    subgroup operations share rounds (disjoint processor groups), so C1/C2
+    are those of a single subgroup's run (the max across groups, which are
+    identical by symmetry)."""
+    K, M, Z = plan.K, plan.M, plan.Z
+    f = field
+    x = f.asarray(x)
+    stats = SimStats(K=K, p=plan.p)
+
+    # draw phase: subgroup j = processors {j + Z*i}, runs M×M prepare-and-shoot
+    F = np.zeros(K, dtype=np.uint64)
+    if plan.draw_plan is not None:
+        draw_stats = None
+        for j in range(Z):
+            idx = j + Z * np.arange(M)
+            sub_out, st = simulate_prepare_shoot(x[idx], plan.draw_matrix, plan.draw_plan, f)
+            F[idx] = sub_out
+            draw_stats = st
+        stats.C1 += draw_stats.C1
+        stats.C2 += draw_stats.C2
+        stats.round_sizes += draw_stats.round_sizes
+    else:
+        F[:] = x
+    # local scale α_i^{rev(j)} — no communication
+    F = f.mul(F, plan.local_scale.astype(np.uint64))
+
+    # loose phase: group i = processors {Z*i + j}, runs Z-point butterfly
+    out = np.zeros(K, dtype=np.uint64)
+    if plan.loose_plan is not None:
+        loose_stats = None
+        for i in range(M):
+            idx = Z * i + np.arange(Z)
+            sub_out, st = simulate_butterfly(F[idx], plan.loose_plan, f)
+            out[idx] = sub_out
+            loose_stats = st
+        stats.C1 += loose_stats.C1
+        stats.C2 += loose_stats.C2
+        stats.round_sizes += loose_stats.round_sizes
+    else:
+        out[:] = F
+    return out, stats

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the fused butterfly-round MAC kernel.
+
+One draw-and-loose/DFT round at a single processor group is
+    out = Σ_ρ tw[:, ρ] · parts[ρ]   (mod q)
+with ``parts[ρ]``: (B, *payload) the value received from the digit-ρ group
+member and ``tw``: (B, radix) the twiddle row (schedule constants).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.field import madd, shoup_mul
+
+
+def butterfly_mac_ref(
+    parts: jnp.ndarray,  # (radix, B, P) uint32
+    tw: jnp.ndarray,  # (B, radix) uint32
+    tw_sh: jnp.ndarray,  # (B, radix) uint32
+    q: int,
+) -> jnp.ndarray:
+    radix = parts.shape[0]
+    acc = None
+    for r in range(radix):
+        term = shoup_mul(parts[r], tw[:, r : r + 1], tw_sh[:, r : r + 1], q)
+        acc = term if acc is None else madd(acc, term, q)
+    return acc

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the GF(q) matmul kernel: C = (A @ B) mod q.
+
+A: (M, K) uint32, B: (K, N) uint32, canonical representatives < q < 2^31.
+Exactness strategy mirrors the device tier: uint32-only limb products
+(field.mmul) with modular accumulation — slow (O(MNK) scalar mod-muls) but
+bit-exact, used as the allclose oracle for the Pallas kernel.
+
+A fast host oracle (numpy uint64) is also provided for big test shapes.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.field import Field, madd, mmul
+
+
+def gf_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, q: int) -> jnp.ndarray:
+    """(A @ B) mod q, pure jnp, uint32-only. a: (..., M, K), b: (..., K, N)."""
+    K = a.shape[-1]
+    acc = mmul(a[..., :, 0, None], b[..., 0, None, :], q)
+    for k in range(1, K):
+        acc = madd(acc, mmul(a[..., :, k, None], b[..., k, None, :], q), q)
+    return acc
+
+
+def gf_matmul_host(a: np.ndarray, b: np.ndarray, q: int) -> np.ndarray:
+    """Exact numpy uint64 oracle."""
+    f = Field(q)
+    return f.matmul(a, b)

@@ -1,0 +1,243 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell and record memory/cost/collective analyses (deliverable (e)).
+
+MUST be run as its own process (the two lines above run before any other
+import — jax locks the device count at first init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+
+Per cell it writes results/dryrun/<arch>__<shape>__<mesh>.json with:
+    memory_analysis  (per-device arg/output/temp bytes)
+    cost_analysis    (per-device HLO flops / bytes accessed)
+    collectives      (op-type → count + output bytes, parsed from the
+                      compiled per-device HLO — the ICI roofline term)
+    param/state byte totals, skip reasons, wall times.
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import SHAPES, get, shape_applicable  # noqa: E402
+from repro.configs.registry import all_arch_names  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.rules import big_model, rules_for  # noqa: E402
+from repro.models import build_model, decode_input_specs, train_batch_specs  # noqa: E402
+from repro.train import (  # noqa: E402
+    OptConfig,
+    batch_shardings,
+    cache_shardings,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    opt_state_shardings,
+    param_shardings,
+    state_specs,
+)
+from repro.dist.sharding import named_sharding  # noqa: E402
+
+_COLL_RE = re.compile(
+    r"=\s+([a-z0-9]+)\[([0-9,]*)\][^\s]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum OUTPUT bytes of every collective op in the per-device HLO.
+
+    '-start' variants are counted once ('-done' carries no shape of its own
+    in the match because its operand is the start op's result token — the
+    regex only matches ops whose result is an array type).
+    """
+    out: dict[str, dict] = {}
+    seen_start = set()
+    for m in _COLL_RE.finditer(hlo_text):
+        dt, dims, op = m.group(1), m.group(2), m.group(3)
+        full = m.group(0)
+        if "-done(" in full:
+            continue
+        nbytes = _DTYPE_BYTES.get(dt, 4)
+        for d in dims.split(","):
+            if d:
+                nbytes *= int(d)
+        rec = out.setdefault(op, {"count": 0, "bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += nbytes
+    return out
+
+
+def _tree_bytes(shapes) -> int:
+    return int(
+        sum(
+            np.prod(l.shape, dtype=np.int64) * jnp.dtype(l.dtype).itemsize
+            for l in jax.tree.leaves(shapes)
+        )
+    )
+
+
+def dryrun_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str, force=False):
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_tag}.json")
+    if os.path.exists(path) and not force:
+        print(f"[skip existing] {path}")
+        return json.load(open(path))
+
+    cfg = get(arch)
+    shape = SHAPES[shape_name]
+    rec: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_tag,
+        "kind": shape.kind,
+        "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+    }
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        json.dump(rec, open(path, "w"), indent=2)
+        print(f"[skipped by design] {arch} × {shape_name}: {reason}")
+        return rec
+
+    t_start = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_chips = int(np.prod(list(mesh.shape.values())))
+        rules = rules_for(cfg, shape)
+        model = build_model(cfg)
+        pshapes, _ = model.param_specs()
+        rec["param_bytes"] = _tree_bytes(pshapes)
+        ps = param_shardings(model, mesh, rules)
+
+        if shape.kind == "train":
+            ocfg = OptConfig(
+                moment_dtype="bfloat16" if big_model(cfg) else "float32"
+            )
+            rec["moment_dtype"] = ocfg.moment_dtype
+            step = make_train_step(model, ocfg, mesh=mesh, rules=rules)
+            oshard = opt_state_shardings(ocfg, model, mesh, rules)
+            ospecs = state_specs(ocfg, pshapes)
+            bshard = batch_shardings(model, mesh, rules, "train")
+            bspecs = train_batch_specs(cfg, shape)
+            rec["state_bytes"] = rec["param_bytes"] + _tree_bytes(ospecs)
+            jitted = jax.jit(
+                step, in_shardings=(ps, oshard, bshard), out_shardings=(ps, oshard, None)
+            )
+            args = (pshapes, ospecs, bspecs)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(model, mesh=mesh, rules=rules)
+            bshard = batch_shardings(model, mesh, rules, "train")
+            bspecs = train_batch_specs(cfg, shape)
+            bspecs.pop("labels")
+            bshard = {k: v for k, v in bshard.items() if k in bspecs}
+            jitted = jax.jit(step, in_shardings=(ps, bshard), out_shardings=None)
+            args = (pshapes, bspecs)
+        else:  # decode
+            step = make_decode_step(model, mesh=mesh, rules=rules)
+            cshapes = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len)
+            )
+            rec["cache_bytes"] = _tree_bytes(cshapes)
+            cshard = cache_shardings(model, mesh, rules, cshapes)
+            dspecs = decode_input_specs(cfg, shape)
+            tshard = named_sharding(mesh, rules, ("batch", None), dspecs["tokens"].shape)
+            pshard_pos = named_sharding(mesh, rules, ("batch",), dspecs["pos"].shape)
+            jitted = jax.jit(
+                step,
+                in_shardings=(ps, cshard, tshard, pshard_pos),
+                out_shardings=(None, cshard),
+            )
+            args = (pshapes, cshapes, dspecs["tokens"], dspecs["pos"])
+
+        lowered = jitted.lower(*args)
+        t_low = time.time()
+        compiled = lowered.compile()
+        t_comp = time.time()
+
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+        }
+        ca = compiled.cost_analysis() or {}
+        cost = {
+            "flops_per_device": float(ca.get("flops", -1.0)),
+            "bytes_accessed_per_device": float(ca.get("bytes accessed", -1.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0)),
+        }
+        txt = compiled.as_text()
+        colls = parse_collectives(txt)
+
+        rec.update(
+            status="ok",
+            n_chips=n_chips,
+            lower_s=round(t_low - t_start, 2),
+            compile_s=round(t_comp - t_low, 2),
+            memory=mem,
+            cost=cost,
+            collectives=colls,
+            collective_bytes_per_device=int(sum(c["bytes"] for c in colls.values())),
+            hlo_bytes=len(txt),
+        )
+        print(
+            f"[ok] {arch} × {shape_name} × {mesh_tag}: "
+            f"compile {rec['compile_s']}s, "
+            f"flops/dev {cost['flops_per_device']:.3e}, "
+            f"coll {rec['collective_bytes_per_device']/1e6:.1f} MB/dev, "
+            f"temp {mem['temp_bytes']/1e9:.2f} GB/dev"
+        )
+    except Exception as e:  # noqa: BLE001
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[ERROR] {arch} × {shape_name} × {mesh_tag}: {rec['error']}")
+    json.dump(rec, open(path, "w"), indent=2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if args.all:
+        cells = [(a, s) for a in all_arch_names() for s in SHAPES]
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+    for mp in meshes:
+        for arch, shape in cells:
+            dryrun_cell(arch, shape, mp, args.out, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: measure one (arch × shape × mesh) cell under a
+set of optimization levers (launch/profiles.py) and append the iteration to
+results/perf_iterations.jsonl (hypothesis → change → before → after).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.hillclimb --arch jamba-v0.1-52b \
+      --shape train_4k [--multi-pod] --levers attn_heads,logits_vocab \
+      --hypothesis "..." [--tag iter2]
+
+Metrics per run: three roofline terms (trip-count-aware jaxpr compute/memory
++ differential-corrected collective bytes), HBM footprint from the full
+compile's memory_analysis, useful-flops ratio.
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import SHAPES, get  # noqa: E402
+from repro.launch import costpass  # noqa: E402
+from repro.launch.dryrun import parse_collectives  # noqa: E402
+from repro.launch.jaxpr_cost import cost_of_fn  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.profiles import BASELINE, Profile, apply_profile_cfg, rules_for  # noqa: E402
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, model_flops  # noqa: E402
+
+
+def measure(arch: str, shape_name: str, multi_pod: bool, profile: Profile) -> dict:
+    cfg = apply_profile_cfg(get(arch), profile)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    rules = rules_for(cfg, shape, profile)
+
+    mdt = "bfloat16" if profile.bf16_moments else None
+    t0 = time.time()
+    # trip-count-aware compute/memory (logical, mesh-independent)
+    fn, args = costpass._build_step(cfg, shape, None, None, moment_dtype=mdt)
+    c = cost_of_fn(fn, *args)
+
+    # full compile: memory + raw collective schedule
+    jt, args_m = costpass._build_step(cfg, shape, mesh, rules, moment_dtype=mdt)
+    compiled = jt.lower(*args_m).compile()
+    ma = compiled.memory_analysis()
+    colls_full = parse_collectives(compiled.as_text())
+
+    # differential collective correction (layer-scan trip counts)
+    colls = {}
+    for r in (1, 2):
+        cfg_r, repeats = costpass._cfg_with_repeats(cfg, r)
+        jt_r, args_r = costpass._build_step(cfg_r, shape, mesh, rules, moment_dtype=mdt)
+        colls[r] = parse_collectives(jt_r.lower(*args_r).compile().as_text())
+    _, R = costpass._cfg_with_repeats(cfg, 1)
+    coll_bytes = 0
+    coll_by_op = {}
+    for op in set(colls[1]) | set(colls[2]):
+        b1 = colls[1].get(op, {}).get("bytes", 0)
+        b2 = colls[2].get(op, {}).get("bytes", 0)
+        coll_by_op[op] = max(b1 + (R - 1) * (b2 - b1), 0)
+        coll_bytes += coll_by_op[op]
+
+    compute_s = c.flops / n_chips / PEAK_FLOPS
+    memory_s = c.bytes / n_chips / HBM_BW
+    memory_flash_s = c.bytes_flash / n_chips / HBM_BW
+    coll_s = coll_bytes / ICI_BW
+    # bottleneck judged with the flash-fused memory term: the S² score
+    # tiles are VMEM-resident in the fused TPU attention kernel (chunk
+    # 1024²·f32 = 4 MiB < 16 MiB VMEM) — see jaxpr_cost.Cost.tile_bytes
+    terms = {"compute": compute_s, "memory": memory_flash_s, "collective": coll_s}
+    mf = model_flops(get(arch), shape)
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "profile": profile.name,
+        "levers": {
+            k: getattr(profile, k)
+            for k in (
+                "attn_heads", "moe_ep", "moe_resident", "moe_gather", "dp_only",
+                "bf16_moments", "logits_vocab", "no_fsdp", "time_chunk",
+            )
+        },
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "memory_flash_s": memory_flash_s,
+        "collective_s": coll_s,
+        "bottleneck": max(terms, key=terms.get),
+        "step_time_bound_s": max(terms.values()),
+        "roofline_fraction": compute_s / max(terms.values()),
+        "useful_ratio": mf / c.flops,
+        "collective_gb_per_dev": coll_bytes / 1e9,
+        "collective_by_op_gb": {k: v / 1e9 for k, v in sorted(coll_by_op.items(), key=lambda kv: -kv[1])},
+        "hbm_gb_per_dev": (ma.argument_size_in_bytes + ma.temp_size_in_bytes + ma.output_size_in_bytes) / 1e9,
+        "temp_gb_per_dev": ma.temp_size_in_bytes / 1e9,
+        "wall_s": round(time.time() - t0, 1),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--levers", default="", help="comma list; empty = baseline")
+    ap.add_argument("--time-chunk", type=int, default=0)
+    ap.add_argument("--hypothesis", default="")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--log", default="results/perf_iterations.jsonl")
+    args = ap.parse_args()
+
+    levers = [l for l in args.levers.split(",") if l]
+    kw = {l: True for l in levers if l != "time_chunk"}
+    if "time_chunk" in levers or args.time_chunk:
+        kw["time_chunk"] = args.time_chunk or 256
+    prof = Profile(args.tag or (("+".join(levers)) or "baseline"), **kw)
+    rec = measure(args.arch, args.shape, args.multi_pod, prof)
+    rec["hypothesis"] = args.hypothesis
+    os.makedirs(os.path.dirname(args.log), exist_ok=True)
+    with open(args.log, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    print(json.dumps(rec, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,201 @@
+"""Trip-count-aware cost model from the jaxpr (launch/roofline.py input).
+
+XLA's HloCostAnalysis counts while-loop bodies ONCE (verified empirically —
+a scan of 10 dots reports 1 dot), which silently destroys the compute/memory
+roofline for scanned-layer models. This walker traverses the CLOSED jaxpr —
+where every ``scan`` carries its static trip count — and accumulates:
+
+* flops: 2·MACs for dot_general (batch/contract aware); |out| for
+  elementwise arithmetic; 0 for layout/move ops.
+* hbm_bytes: inputs+outputs of dot_general / gather / scatter / reduce /
+  cumulative ops at full weight, elementwise traffic at 1/FUSION_DISCOUNT
+  weight (XLA fuses elementwise chains; the discount — default 4 — models a
+  4-op average fusion depth; documented in EXPERIMENTS §Roofline).
+* per-op breakdown for the hillclimb's "where are the flops" question.
+
+Scan bodies are multiplied by ``length``; while bodies (none in our models)
+by 1 with a warning flag; cond branches by their max.
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+import numpy as np
+
+import jax
+
+
+FUSION_DISCOUNT = 4.0
+
+_MOVE_OPS = {
+    "reshape", "transpose", "broadcast_in_dim", "squeeze", "rev",
+    "convert_element_type", "bitcast_convert_type", "copy", "stop_gradient",
+    "slice",
+}
+_HEAVY_OPS = {
+    "dot_general", "gather", "scatter", "scatter-add", "scatter_add",
+    "dynamic_slice", "dynamic_update_slice", "concatenate", "sort",
+    "reduce_sum", "reduce_max", "reduce_min", "reduce_prod", "argmax",
+    "argmin", "reduce_and", "reduce_or", "cumsum", "cummax", "cumlogsumexp",
+    "top_k", "iota", "pad",
+}
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    # bytes attributable to attention score/prob TILES: rank ≥ 4 arrays whose
+    # last two dims are both ≥ 256 (e.g. (B,Hkv,G,1024,1024) f32). In the
+    # fused TPU kernel these are VMEM-resident (1024²·4B = 4 MiB < 16 MiB
+    # VMEM) and never touch HBM; `bytes - tile_bytes` is the flash-fused
+    # memory-roofline term (EXPERIMENTS §Perf q.iter4).
+    tile_bytes: float = 0.0
+    by_op: dict = field(default_factory=lambda: defaultdict(float))
+    has_while: bool = False
+
+    def scaled(self, k: float) -> "Cost":
+        c = Cost(self.flops * k, self.bytes * k, self.tile_bytes * k,
+                 has_while=self.has_while)
+        for o, v in self.by_op.items():
+            c.by_op[o] = v * k
+        return c
+
+    def add(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.tile_bytes += other.tile_bytes
+        self.has_while |= other.has_while
+        for o, v in other.by_op.items():
+            self.by_op[o] += v
+
+    @property
+    def bytes_flash(self) -> float:
+        return self.bytes - self.tile_bytes
+
+
+def _aval_bytes(aval) -> float:
+    try:
+        return float(np.prod(aval.shape, dtype=np.float64) * aval.dtype.itemsize)
+    except Exception:  # noqa: BLE001
+        return 0.0
+
+
+def _aval_size(aval) -> float:
+    try:
+        return float(np.prod(aval.shape, dtype=np.float64))
+    except Exception:  # noqa: BLE001
+        return 0.0
+
+
+def _is_attn_tile(aval) -> bool:
+    """Attention score/prob tile: rank ≥ 4 with both trailing dims ≥ 256."""
+    try:
+        sh = aval.shape
+        return len(sh) >= 4 and sh[-1] >= 256 and sh[-2] >= 256
+    except Exception:  # noqa: BLE001
+        return False
+
+
+def _dot_flops(eqn) -> float:
+    ((lc, rc), (lb, rb)) = eqn.params["dimension_numbers"]
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    batch = np.prod([lhs.shape[i] for i in lb], dtype=np.float64) if lb else 1.0
+    contract = np.prod([lhs.shape[i] for i in lc], dtype=np.float64) if lc else 1.0
+    lfree = np.prod(
+        [s for i, s in enumerate(lhs.shape) if i not in set(lc) | set(lb)],
+        dtype=np.float64,
+    )
+    rfree = np.prod(
+        [s for i, s in enumerate(rhs.shape) if i not in set(rc) | set(rb)],
+        dtype=np.float64,
+    )
+    return 2.0 * batch * contract * lfree * rfree
+
+
+def _is_closed(v):
+    return hasattr(v, "jaxpr") and hasattr(v, "consts")
+
+
+def _is_jaxpr(v):
+    return hasattr(v, "eqns") and hasattr(v, "invars") and not _is_closed(v)
+
+
+def jaxpr_cost(jaxpr) -> Cost:
+    total = Cost()
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name in ("scan",):
+            inner = eqn.params["jaxpr"].jaxpr
+            length = eqn.params["length"]
+            total.add(jaxpr_cost(inner).scaled(float(length)))
+            continue
+        if name in ("while",):
+            total.has_while = True
+            total.add(jaxpr_cost(eqn.params["body_jaxpr"].jaxpr))
+            continue
+        if name in ("cond",):
+            branches = eqn.params["branches"]
+            costs = [jaxpr_cost(b.jaxpr) for b in branches]
+            best = max(costs, key=lambda c: c.flops)
+            total.add(best)
+            continue
+        # generic: recurse into ANY sub-jaxpr-carrying primitive (pjit,
+        # remat/remat2/checkpoint, custom_vjp, shard_map, ... — robust
+        # against primitive renames across jax versions)
+        subs = []
+        for v in eqn.params.values():
+            if _is_closed(v):
+                subs.append(v.jaxpr)
+            elif _is_jaxpr(v):
+                subs.append(v)
+            elif isinstance(v, (tuple, list)):
+                for e in v:
+                    if _is_closed(e):
+                        subs.append(e.jaxpr)
+                    elif _is_jaxpr(e):
+                        subs.append(e)
+        if subs:
+            for s in subs:
+                total.add(jaxpr_cost(s))
+            continue
+        out_bytes = sum(_aval_bytes(v.aval) for v in eqn.outvars)
+        in_bytes = sum(
+            _aval_bytes(v.aval) for v in eqn.invars if hasattr(v, "aval")
+        )
+        tile_io = sum(
+            _aval_bytes(v.aval)
+            for vs in (eqn.outvars, [v for v in eqn.invars if hasattr(v, "aval")])
+            for v in vs
+            if _is_attn_tile(v.aval)
+        )
+        if name == "dot_general":
+            fl = _dot_flops(eqn)
+            total.flops += fl
+            total.bytes += in_bytes + out_bytes
+            total.tile_bytes += tile_io
+            total.by_op["dot_general"] += fl
+        elif name in _MOVE_OPS:
+            pass  # fused / layout-only
+        elif name in _HEAVY_OPS:
+            total.bytes += in_bytes + out_bytes
+            total.tile_bytes += tile_io
+            total.by_op[name] += in_bytes + out_bytes
+        else:
+            # elementwise arithmetic (incl. transcendentals, reduce via
+            # generic 'reduce_*' caught above)
+            sz = sum(_aval_size(v.aval) for v in eqn.outvars)
+            total.flops += sz
+            total.bytes += (in_bytes + out_bytes) / FUSION_DISCOUNT
+            total.tile_bytes += tile_io / FUSION_DISCOUNT
+            total.by_op["elementwise"] += sz
+    return total
+
+
+def cost_of_fn(fn, *arg_specs) -> Cost:
+    """Trace fn abstractly and walk the jaxpr (GLOBAL logical cost — divide
+    by chip count for per-device roofline terms under even sharding)."""
+    jx = jax.make_jaxpr(fn)(*arg_specs)
+    return jaxpr_cost(jx.jaxpr)

@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module constant) so importing never touches jax device
+state. Single pod: (data=16, model=16) = 256 chips (TPU v5e-256). Multi-pod:
+(pod=2, data=16, model=16) = 512 chips; the ``pod`` axis carries only
+data-parallel gradient reduction (DCN-friendly), ``model`` stays inside the
+pod's ICI domain.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )

@@ -1,0 +1,36 @@
+"""Render EXPERIMENTS.md §Perf from results/perf_iterations.jsonl."""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def render(log_path: str = "results/perf_iterations.jsonl") -> str:
+    rows = [json.loads(l) for l in open(log_path)]
+    out = []
+    out.append(
+        "| iter | cell | levers | compute_s | mem_s (flash) | coll_s | coll GB/dev | "
+        "temp GB/dev | bound | roofline-frac |"
+    )
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        lev = "+".join(k for k, v in r["levers"].items() if v) or "—"
+        mf = r.get("memory_flash_s", r["memory_s"])
+        out.append(
+            f"| {r['profile']} | {r['arch']}×{r['shape']}×{r['mesh']} | {lev} | "
+            f"{r['compute_s']:.3f} | {mf:.3f} | {r['collective_s']:.3f} | "
+            f"{r['collective_gb_per_dev']:.1f} | {r['temp_gb_per_dev']:.0f} | "
+            f"{r['bottleneck']} | {r['roofline_fraction']:.3f} |"
+        )
+    out.append("")
+    out.append("Hypotheses (verbatim from the run log):")
+    out.append("")
+    for r in rows:
+        verdict = ""
+        out.append(f"* **{r['profile']}** — {r.get('hypothesis', '')}")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(render(sys.argv[1] if len(sys.argv) > 1 else "results/perf_iterations.jsonl"))

@@ -1,0 +1,93 @@
+"""Sharding/remat optimization profiles for the §Perf hillclimb.
+
+``baseline`` is the paper-faithful first implementation measured in
+EXPERIMENTS §Roofline. Each lever is an independently-toggleable change with
+an explicit hypothesis (EXPERIMENTS §Perf logs before/after per lever):
+
+* ``attn_heads``   — constrain q/k/v to head-sharding inside attention
+                     instead of inheriting the block-boundary seq-sharding
+                     (kills GSPMD 'involuntary full rematerialization'
+                     reshards in the chunked-attention scans).
+* ``moe_ep``       — expert parallelism: experts → data axis, expert ff →
+                     model axis (weights fully sharded with NO per-layer
+                     FSDP all-gather; tokens all-to-all to expert owners).
+                     Divisibility: jamba 16e/16, arctic 128e/16, dsv3 256e/16.
+* ``logits_vocab`` — constrain lm-head logits to vocab-sharding (batch, ∅,
+                     vocab) so the CE never materializes a full-vocab tensor.
+* ``no_fsdp``      — drop d_model→data param sharding for models whose
+                     sharded-over-model state fits HBM (≤8B params):
+                     removes ALL per-layer param gathers; gradient sync
+                     becomes one reduce of model-sharded grads.
+* ``time_chunk``   — chunked+checkpointed time scans in RWKV/Mamba
+                     (256-step chunks): backward saves only chunk-boundary
+                     states instead of every step's state.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.dist.sharding import ShardingRules
+from repro.launch.rules import rules_for as _baseline_rules
+
+
+@dataclass(frozen=True)
+class Profile:
+    name: str
+    attn_heads: bool = False
+    moe_ep: bool = False
+    moe_resident: bool = False  # expert weights resident (no expert FSDP)
+    moe_gather: bool = False  # gather-form dispatch/combine (no scatter-add)
+    dp_only: bool = False  # pure DP for small models: batch over ALL axes
+    bf16_moments: bool = False
+    logits_vocab: bool = False
+    no_fsdp: bool = False
+    time_chunk: int = 0
+
+
+BASELINE = Profile("baseline")
+OPT = Profile("opt", attn_heads=True, moe_ep=True, logits_vocab=True,
+              no_fsdp=True, time_chunk=256)
+
+
+def profile_with(name: str, **kw) -> Profile:
+    return Profile(name, **kw)
+
+
+def rules_for(cfg: ModelConfig, shape: ShapeSpec, profile: Profile = BASELINE) -> ShardingRules:
+    r = _baseline_rules(cfg, shape)
+    flags = set()
+    if profile.attn_heads:
+        flags.add("attn_heads")
+    if profile.logits_vocab:
+        flags.add("logits_vocab")
+    if profile.moe_gather:
+        flags.add("moe_gather")
+    if profile.moe_ep:
+        r = r.override(experts=("data",), moe_ff=("model",))
+    if profile.moe_resident:
+        # experts spread over (model, data) when divisible (dsv3: 1/chip),
+        # else model only (jamba: 1 per model shard); weights NOT FSDP'd
+        r = r.override(experts=("model", "data"), expert_d=())
+    if profile.dp_only:
+        r = r.override(batch=("pod", "data", "model"), seq=(), d_model=())
+    if profile.no_fsdp and _params_fit_without_fsdp(cfg):
+        r = r.override(d_model=())
+    if flags:
+        r = r.with_flags(flags)
+    return r
+
+
+def apply_profile_cfg(cfg: ModelConfig, profile: Profile) -> ModelConfig:
+    if profile.time_chunk and cfg.ssm is not None:
+        return cfg.replace(time_chunk=profile.time_chunk)
+    return cfg
+
+
+def _params_fit_without_fsdp(cfg: ModelConfig) -> bool:
+    """Model-axis-only sharding fits v5e HBM when total params ≤ ~8B
+    (bf16 params + f32 moments over 16 model shards ≲ 5 GB)."""
+    from repro.launch.roofline import param_counts
+
+    return param_counts(cfg)["total"] <= 8e9

@@ -1,0 +1,68 @@
+"""Model input construction: concrete batches (tests/benches) and
+ShapeDtypeStruct specs (dry-run — no allocation).
+
+Modality frontends are STUBS per the brief: whisper gets precomputed frame
+embeddings (B, n_frames, d_model); the VLM gets precomputed patch embeddings
+(B, n_patches, d_model). For VLM shapes, seq_len counts the TOTAL positions
+(patches + text)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+def batch_dims(cfg: ModelConfig, kind: str) -> dict:
+    """Logical dim names for each batch field (for in_shardings)."""
+    d: dict = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+    if cfg.encdec is not None:
+        d["frames"] = ("batch", "frames", "d_model")
+    if cfg.vlm is not None:
+        d["patches"] = ("batch", "seq", "d_model")
+    if kind == "decode":
+        d = {"tokens": ("batch", None), "pos": ("batch",)}
+    return d
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec, dtype=jnp.bfloat16) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    text_s = S - (cfg.vlm.n_patches if cfg.vlm else 0)
+    spec: dict = {
+        "tokens": jax.ShapeDtypeStruct((B, text_s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, text_s), jnp.int32),
+    }
+    if cfg.encdec is not None:
+        spec["frames"] = jax.ShapeDtypeStruct((B, cfg.encdec.n_frames, cfg.d_model), dtype)
+    if cfg.vlm is not None:
+        spec["patches"] = jax.ShapeDtypeStruct((B, cfg.vlm.n_patches, cfg.d_model), dtype)
+    return spec
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    B = shape.global_batch
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+    }
+
+
+def make_batch(cfg: ModelConfig, B: int, S: int, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    text_s = S - (cfg.vlm.n_patches if cfg.vlm else 0)
+    tokens = rng.integers(0, cfg.vocab_size, size=(B, text_s), dtype=np.int32)
+    batch = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(tokens)}
+    if cfg.encdec is not None:
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.encdec.n_frames, cfg.d_model)).astype(np.float32) * 0.02,
+            dtype=jnp.bfloat16,
+        )
+    if cfg.vlm is not None:
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(B, cfg.vlm.n_patches, cfg.d_model)).astype(np.float32) * 0.02,
+            dtype=jnp.bfloat16,
+        )
+    return batch

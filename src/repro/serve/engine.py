@@ -1,0 +1,80 @@
+"""Batched serving engine: prefill + greedy/temperature decode loop.
+
+Minimal-but-real: a fixed-capacity batch of sequences, each with its own
+position counter; prompts are right-padded, prefill fills the caches via
+per-token decode of the prompt region (keeps one compiled step — the
+latency-optimal path would add a separate prefill graph, which
+launch/dryrun.py exercises at the 32k shapes), then new tokens are sampled
+until max length or EOS.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.train.train_loop import make_decode_step
+
+
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray  # (B, total)
+    steps: int
+
+
+class Engine:
+    def __init__(self, model: Model, params, max_len: int = 256, mesh=None, rules=None):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self._step = jax.jit(make_decode_step(model, mesh, rules))
+
+    def generate(
+        self,
+        prompts: list[list[int]],
+        max_new_tokens: int = 32,
+        eos_id: int | None = None,
+        greedy: bool = True,
+        seed: int = 0,
+    ) -> GenerationResult:
+        B = len(prompts)
+        cfg = self.model.cfg
+        plen = np.array([len(p) for p in prompts])
+        total = int(plen.max()) + max_new_tokens
+        assert total <= self.max_len
+        toks = np.zeros((B, total), dtype=np.int32)
+        for b, p in enumerate(prompts):
+            toks[b, : len(p)] = p
+        cache = self.model.init_cache(B, self.max_len)
+        if self.model.is_encdec:
+            # stub frames: zeros (real system: audio frontend output)
+            cache = dict(cache)
+            cache["enc_out"] = jnp.zeros(
+                (B, cfg.encdec.n_frames, cfg.d_model), self.model.dtype
+            )
+        toks_j = jnp.asarray(toks)
+        key = jax.random.key(seed)
+        steps = 0
+        for t in range(total - 1):
+            cur = toks_j[:, t : t + 1]
+            pos = jnp.full((B,), t, jnp.int32)
+            logits, cache = self._step(self.params, cache, cur, pos)
+            steps += 1
+            lg = logits[:, 0, : cfg.vocab_size]
+            if greedy:
+                nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            else:
+                key, sk = jax.random.split(key)
+                nxt = jax.random.categorical(sk, lg).astype(jnp.int32)
+            # only overwrite positions beyond each prompt
+            write = (t + 1) >= jnp.asarray(plen)
+            new_col = jnp.where(write, nxt, toks_j[:, t + 1])
+            toks_j = toks_j.at[:, t + 1].set(new_col)
+            if eos_id is not None and bool(jnp.all(jnp.any(toks_j == eos_id, axis=1))):
+                break
+        return GenerationResult(tokens=np.asarray(toks_j), steps=steps)

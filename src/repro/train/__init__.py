@@ -1,0 +1,14 @@
+from .checkpoint import latest_step, restore_checkpoint, save_checkpoint  # noqa: F401
+from .data import DataConfig, Prefetcher, SyntheticLM  # noqa: F401
+from .optimizer import OptConfig, apply_updates, init_state, state_specs  # noqa: F401
+from .train_loop import (  # noqa: F401
+    batch_shardings,
+    cache_shardings,
+    make_ctx,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    opt_state_shardings,
+    param_shardings,
+)
+from .elastic import CodedStateGuard, reshard_state  # noqa: F401

@@ -1,0 +1,92 @@
+"""Sharded checkpoint save/restore with elastic resharding.
+
+Format: one ``.npz`` per top-level state group + ``manifest.json`` with the
+pytree structure, shapes, dtypes and step. Arrays are saved logically
+complete (test-scale); ``restore`` re-places them under ANY mesh/sharding —
+that re-placement IS the elastic-scaling path (restore on a different DP/TP
+factorization just changes the NamedShardings). At real scale the same
+manifest format holds per-shard files (shard_id fields are already in the
+manifest schema).
+
+The coded fast path (coded/rs_checkpoint.py) complements this: disk
+checkpoints every N steps, in-HBM Cauchy parity every n << N steps.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _flatten_with_names(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        name = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        out[name] = leaf
+    return out
+
+
+def save_checkpoint(path: str, state: Any, step: int, extra: dict | None = None):
+    os.makedirs(path, exist_ok=True)
+    named = _flatten_with_names(state)
+    arrays = {k: np.asarray(v) for k, v in named.items()}
+    np.savez(os.path.join(path, f"state_{step:08d}.npz"), **arrays)
+    treedef = jax.tree_util.tree_structure(state)
+    manifest = {
+        "step": step,
+        "keys": sorted(arrays),
+        "shapes": {k: list(a.shape) for k, a in arrays.items()},
+        "dtypes": {k: str(a.dtype) for k, a in arrays.items()},
+        "treedef": str(treedef),
+        "format": "logical-full-v1",
+        "shard_id": 0,
+        "n_shards": 1,
+        "extra": extra or {},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def latest_step(path: str) -> int | None:
+    if not os.path.isdir(path):
+        return None
+    steps = [
+        int(f[len("state_") : -len(".npz")])
+        for f in os.listdir(path)
+        if f.startswith("state_") and f.endswith(".npz")
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(path: str, like: Any, step: int | None = None, shardings=None):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs). ``shardings``: optional matching pytree of
+    NamedShardings → device_put under the (possibly different) mesh."""
+    step = step if step is not None else latest_step(path)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {path}")
+    data = np.load(os.path.join(path, f"state_{step:08d}.npz"))
+    leaves, treedef = jax.tree.flatten(like)
+    names = list(_flatten_with_names(like).keys())
+    out = []
+    shard_flat = jax.tree.flatten(shardings)[0] if shardings is not None else [None] * len(leaves)
+    for name, leaf, shard in zip(names, leaves, shard_flat):
+        arr = data[name]
+        want_dtype = np.dtype(leaf.dtype)
+        if arr.dtype.kind == "V":  # ml_dtypes (bfloat16) round-trips as void
+            arr = arr.view(want_dtype)
+        a = jnp.asarray(arr.astype(want_dtype) if arr.dtype != want_dtype else arr)
+        if shard is not None:
+            a = jax.device_put(a, shard)
+        out.append(a)
+    return jax.tree.unflatten(treedef, out), step

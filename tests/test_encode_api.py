@@ -1,0 +1,153 @@
+"""Array-level (jnp) executor tests: prepare-and-shoot / butterfly /
+draw-and-loose / Lagrange, with payload dims, vs the host matrix oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import a2a_encode, plan_for
+from repro.core.draw_loose import (
+    butterfly_apply,
+    decode_dft,
+    decode_draw_loose,
+    encode_dft,
+    encode_draw_loose,
+    encode_lagrange,
+)
+from repro.core.field import M31, NTT, Field
+from repro.core.matrices import (
+    butterfly_target_matrix,
+    lagrange_matrix,
+    random_matrix,
+    random_vector,
+)
+from repro.core.prepare_shoot import encode_oracle, encode_universal
+from repro.core.schedule import (
+    draw_loose_target_matrix,
+    plan_butterfly,
+    plan_draw_loose,
+    plan_prepare_shoot,
+)
+
+
+def as_u32(a):
+    return jnp.asarray(np.asarray(a, dtype=np.uint32))
+
+
+@pytest.mark.parametrize("p", [1, 2, 3])
+@pytest.mark.parametrize("K", [2, 3, 5, 8, 9, 16, 17, 33, 64])
+def test_encode_universal_runtime_A(K, p):
+    f = Field(M31)
+    A = random_matrix(f, K, seed=K + p)
+    x = random_vector(f, K, seed=2 * K + p)
+    out = encode_universal(as_u32(x), as_u32(A), p=p, q=M31)
+    np.testing.assert_array_equal(np.asarray(out, dtype=np.uint64), encode_oracle(x, A))
+
+
+@pytest.mark.parametrize("K,p", [(16, 1), (27, 2), (65, 2)])
+def test_encode_universal_host_A_shoup_path(K, p):
+    """Host numpy A → Shoup-precomputed constants path."""
+    f = Field(M31)
+    A = random_matrix(f, K, seed=1)
+    x = random_vector(f, K, seed=2)
+    out = encode_universal(as_u32(x), np.asarray(A), p=p, q=M31)
+    np.testing.assert_array_equal(np.asarray(out, dtype=np.uint64), encode_oracle(x, A))
+
+
+def test_encode_universal_payload_and_jit():
+    K, p = 16, 1
+    f = Field(M31)
+    A = random_matrix(f, K, seed=3)
+    x = random_vector(f, (K, 4, 8), seed=4)
+    fn = jax.jit(lambda xx, aa: encode_universal(xx, aa, p=p, q=M31))
+    out = fn(as_u32(x), as_u32(A))
+    np.testing.assert_array_equal(np.asarray(out, dtype=np.uint64), encode_oracle(x, A))
+
+
+@pytest.mark.parametrize("K,p,q", [(16, 1, NTT), (64, 1, NTT), (9, 2, M31), (256, 1, NTT)])
+def test_butterfly_forward_inverse(K, p, q):
+    f = Field(q)
+    plan = plan_butterfly(K, p, q)
+    x = random_vector(f, (K, 3), seed=5)
+    y = encode_dft(as_u32(x), plan)
+    G = butterfly_target_matrix(f, K, p + 1)
+    np.testing.assert_array_equal(np.asarray(y, dtype=np.uint64), encode_oracle(x, G, q))
+    back = decode_dft(y, plan)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x, dtype=np.uint32))
+
+
+@pytest.mark.parametrize("K,p,q", [(8, 1, NTT), (12, 1, NTT), (20, 1, NTT), (18, 2, M31), (7, 1, NTT)])
+def test_draw_loose_and_decode(K, p, q):
+    f = Field(q)
+    plan = plan_draw_loose(K, p, q, seed=7)
+    x = random_vector(f, (K, 2), seed=8)
+    y = encode_draw_loose(as_u32(x), plan)
+    G = draw_loose_target_matrix(plan)
+    np.testing.assert_array_equal(np.asarray(y, dtype=np.uint64), encode_oracle(x, G, q))
+    back = decode_draw_loose(y, plan)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x, dtype=np.uint32))
+
+
+@pytest.mark.parametrize("K,p,q", [(8, 1, NTT), (12, 1, NTT), (6, 1, NTT)])
+def test_lagrange_executor(K, p, q):
+    """Theorem 4 end-to-end: x holds f(ω'_k); output is f(α'_k); equals the
+    true Lagrange matrix application (source permutations cancel)."""
+    f = Field(q)
+    plan_w = plan_draw_loose(K, p, q, seed=11)
+    plan_a = plan_draw_loose(K, p, q, seed=22)
+    x = random_vector(f, K, seed=9)
+    out = encode_lagrange(as_u32(x), plan_w, plan_a)
+    L = lagrange_matrix(f, plan_a.points, plan_w.points)
+    np.testing.assert_array_equal(np.asarray(out, dtype=np.uint64), encode_oracle(x, L, q))
+
+
+def test_a2a_encode_api_selection():
+    f = Field(M31)
+    K = 16
+    A = random_matrix(f, K, seed=0)
+    x = random_vector(f, K, seed=1)
+    out, rep = a2a_encode(as_u32(x), as_u32(A), p=1)
+    assert rep.algorithm == "prepare-and-shoot"
+    assert rep.c1 == rep.c1_lower  # strictly optimal C1
+    np.testing.assert_array_equal(np.asarray(out, dtype=np.uint64), encode_oracle(x, A))
+
+    plan = plan_for("dft", 16, p=1, q=NTT)
+    fq = Field(NTT)
+    xq = random_vector(fq, 16, seed=2)
+    out2, rep2 = a2a_encode(as_u32(xq), plan=plan)
+    assert rep2.algorithm == "butterfly" and rep2.c1 == rep2.c2 == 4
+
+    plan3 = plan_for("vandermonde", 12, p=1, q=NTT)
+    out3, rep3 = a2a_encode(as_u32(random_vector(fq, 12, seed=3)), plan=plan3)
+    assert rep3.algorithm == "draw-and-loose"
+    assert rep3.c2 <= rep2.c2 + 10  # sanity
+
+
+@given(
+    K=st.integers(2, 24),
+    p=st.integers(1, 3),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=25, deadline=None)
+def test_property_universal_random(K, p, seed):
+    """Hypothesis: universality — random A, random x, random (K, p)."""
+    f = Field(M31)
+    A = random_matrix(f, K, seed=seed)
+    x = random_vector(f, K, seed=seed + 1)
+    out = encode_universal(as_u32(x), as_u32(A), p=p, q=M31)
+    np.testing.assert_array_equal(np.asarray(out, dtype=np.uint64), encode_oracle(x, A))
+
+
+@given(h=st.integers(1, 6), seed=st.integers(0, 1000))
+@settings(max_examples=15, deadline=None)
+def test_property_butterfly_roundtrip(h, seed):
+    K = 2**h
+    f = Field(NTT)
+    plan = plan_butterfly(K, 1, NTT)
+    x = random_vector(f, K, seed=seed)
+    y = butterfly_apply(as_u32(x), plan)
+    back = butterfly_apply(y, plan, inverse=True)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x, dtype=np.uint32))

@@ -1,0 +1,132 @@
+"""Device-tier uint32 field arithmetic vs python-int oracle (+ hypothesis)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.field import (
+    M31,
+    NTT,
+    Field,
+    barrett32,
+    madd,
+    mmul,
+    mmul_m31,
+    msub,
+    shoup_mul,
+    shoup_precompute,
+    umulhi32,
+    umulhi32_full,
+)
+
+PRIMES = [M31, NTT, 97, 65537, 2**30 + 3]  # 2^30+3 is prime
+
+
+def test_group_factorizations():
+    for q, factors in [(M31, (2, 3, 7, 11, 31, 151, 331)), (NTT, (2, 3, 5))]:
+        n = q - 1
+        for f in factors:
+            assert n % f == 0
+            while n % f == 0:
+                n //= f
+        assert n == 1
+
+
+@pytest.mark.parametrize("q", [M31, NTT])
+def test_generator_is_primitive(q):
+    f = Field(q)
+    g = f.generator
+    for fac in f._factor_group_order():
+        assert pow(g, (q - 1) // fac, q) != 1
+
+
+def test_root_of_unity_orders():
+    f = Field(NTT)
+    for n in [2, 4, 16, 256, 2**20]:
+        b = f.root_of_unity(n)
+        assert pow(b, n, NTT) == 1
+        assert pow(b, n // 2, NTT) != 1  # primitive
+
+
+@given(a=st.integers(0, 2**31 - 1), b=st.integers(0, 2**31 - 1))
+@settings(max_examples=200, deadline=None)
+def test_umulhi32(a, b):
+    got = int(umulhi32(jnp.uint32(a), jnp.uint32(b)))
+    assert got == (a * b) >> 32
+
+
+@given(a=st.integers(0, 2**32 - 1), b=st.integers(0, 2**32 - 1))
+@settings(max_examples=200, deadline=None)
+def test_umulhi32_full(a, b):
+    got = int(umulhi32_full(jnp.uint32(a), jnp.uint32(b)))
+    assert got == (a * b) >> 32
+
+
+@given(x=st.integers(0, 2**32 - 1), qi=st.integers(0, len(PRIMES) - 1))
+@settings(max_examples=200, deadline=None)
+def test_barrett32(x, qi):
+    q = PRIMES[qi]
+    assert int(barrett32(jnp.uint32(x), q)) == x % q
+
+
+@given(data=st.data(), qi=st.integers(0, len(PRIMES) - 1))
+@settings(max_examples=300, deadline=None)
+def test_mod_ops(data, qi):
+    q = PRIMES[qi]
+    a = data.draw(st.integers(0, q - 1))
+    b = data.draw(st.integers(0, q - 1))
+    assert int(madd(jnp.uint32(a), jnp.uint32(b), q)) == (a + b) % q
+    assert int(msub(jnp.uint32(a), jnp.uint32(b), q)) == (a - b) % q
+    assert int(mmul(jnp.uint32(a), jnp.uint32(b), q)) == (a * b) % q
+
+
+@given(a=st.integers(0, M31 - 1), b=st.integers(0, M31 - 1))
+@settings(max_examples=300, deadline=None)
+def test_mmul_m31(a, b):
+    assert int(mmul_m31(jnp.uint32(a), jnp.uint32(b))) == (a * b) % M31
+
+
+@given(data=st.data(), qi=st.integers(0, len(PRIMES) - 1))
+@settings(max_examples=200, deadline=None)
+def test_shoup_mul(data, qi):
+    q = PRIMES[qi]
+    a = data.draw(st.integers(0, q - 1))
+    c = data.draw(st.integers(0, q - 1))
+    c_pre = int(shoup_precompute(c, q))
+    assert int(shoup_mul(jnp.uint32(a), jnp.uint32(c), jnp.uint32(c_pre), q)) == (a * c) % q
+
+
+def test_vectorized_mod_ops_match_numpy():
+    rng = np.random.default_rng(0)
+    for q in (M31, NTT):
+        a = rng.integers(0, q, size=(64,), dtype=np.uint32)
+        b = rng.integers(0, q, size=(64,), dtype=np.uint32)
+        want = (a.astype(np.uint64) * b.astype(np.uint64)) % q
+        np.testing.assert_array_equal(np.asarray(mmul(a, b, q), dtype=np.uint64), want)
+        want = (a.astype(np.uint64) + b.astype(np.uint64)) % q
+        np.testing.assert_array_equal(np.asarray(madd(a, b, q), dtype=np.uint64), want)
+
+
+def test_host_field_linear_algebra():
+    f = Field(M31)
+    rng = np.random.default_rng(1)
+    A = rng.integers(0, M31, size=(17, 17), dtype=np.uint64)
+    x = rng.integers(0, M31, size=17, dtype=np.uint64)
+    y = f.matmul(x, A)
+    # oracle with python ints
+    want = [(sum(int(x[i]) * int(A[i, j]) for i in range(17))) % M31 for j in range(17)]
+    np.testing.assert_array_equal(y, np.array(want, dtype=np.uint64))
+    # solve/inverse roundtrip
+    Ainv = f.inv_matrix(A)
+    np.testing.assert_array_equal(f.matmul(A, Ainv), np.eye(17, dtype=np.uint64))
+
+
+def test_field_pow_inv():
+    f = Field(NTT)
+    a = np.arange(1, 50, dtype=np.uint64)
+    inv = f.inv(a)
+    np.testing.assert_array_equal(f.mul(a, inv), np.ones_like(a))
+    assert int(f.pow(np.uint64(3), 0)) == 1
+    assert int(f.pow(np.uint64(3), 5)) == 243

@@ -1,0 +1,113 @@
+"""Pallas kernel validation: interpret=True vs pure-jnp/host oracles, with
+shape and prime sweeps + hypothesis property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.field import M31, NTT, Field, shoup_precompute
+from repro.kernels.butterfly.ops import butterfly_mac, butterfly_mac_reference
+from repro.kernels.gf_matmul.ops import gf_matmul, gf_matmul_batched
+from repro.kernels.gf_matmul.ref import gf_matmul_host, gf_matmul_ref
+
+PRIMES = [M31, NTT, 65537, 97]
+
+
+def rand_u32(shape, q, seed):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, q, size=shape, dtype=np.uint32)
+
+
+@pytest.mark.parametrize("q", PRIMES)
+@pytest.mark.parametrize(
+    "M,K,N",
+    [
+        (8, 8, 128),     # single small block
+        (128, 512, 128), # exactly one default block
+        (256, 1024, 256),# multi-block in every dim
+        (130, 70, 200),  # ragged (padding path)
+        (1, 16, 1),      # degenerate
+    ],
+)
+def test_gf_matmul_vs_host_oracle(q, M, K, N):
+    a = rand_u32((M, K), q, seed=M + K)
+    b = rand_u32((K, N), q, seed=N + K)
+    out = np.asarray(gf_matmul(jnp.asarray(a), jnp.asarray(b), q=q), dtype=np.uint64)
+    want = gf_matmul_host(a, b, q)
+    np.testing.assert_array_equal(out, want)
+
+
+@pytest.mark.parametrize("q", [M31, NTT])
+def test_gf_matmul_vs_jnp_ref(q):
+    a = rand_u32((16, 24), q, seed=0)
+    b = rand_u32((24, 8), q, seed=1)
+    out = gf_matmul(jnp.asarray(a), jnp.asarray(b), q=q)
+    ref = gf_matmul_ref(jnp.asarray(a), jnp.asarray(b), q)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_gf_matmul_extreme_values():
+    """q-1 everywhere: worst-case limb magnitudes."""
+    for q in (M31, NTT):
+        a = np.full((64, 512), q - 1, dtype=np.uint32)
+        b = np.full((512, 128), q - 1, dtype=np.uint32)
+        out = np.asarray(gf_matmul(jnp.asarray(a), jnp.asarray(b), q=q), dtype=np.uint64)
+        want = gf_matmul_host(a, b, q)
+        np.testing.assert_array_equal(out, want)
+
+
+def test_gf_matmul_batched():
+    q = M31
+    a = rand_u32((6, 9, 17), q, seed=3)
+    b = rand_u32((6, 17, 5), q, seed=4)
+    out = np.asarray(gf_matmul_batched(jnp.asarray(a), jnp.asarray(b), q=q), dtype=np.uint64)
+    for i in range(6):
+        np.testing.assert_array_equal(out[i], gf_matmul_host(a[i], b[i], q))
+
+
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 60),
+    n=st.integers(1, 40),
+    qi=st.integers(0, len(PRIMES) - 1),
+    seed=st.integers(0, 10000),
+)
+@settings(max_examples=15, deadline=None)
+def test_gf_matmul_property(m, k, n, qi, seed):
+    q = PRIMES[qi]
+    a = rand_u32((m, k), q, seed)
+    b = rand_u32((k, n), q, seed + 1)
+    out = np.asarray(gf_matmul(jnp.asarray(a), jnp.asarray(b), q=q), dtype=np.uint64)
+    np.testing.assert_array_equal(out, gf_matmul_host(a, b, q))
+
+
+@pytest.mark.parametrize("q", [M31, NTT])
+@pytest.mark.parametrize("radix,B,P", [(2, 8, 16), (2, 256, 512), (3, 9, 100), (4, 64, 1000)])
+def test_butterfly_mac_vs_ref(q, radix, B, P):
+    rng = np.random.default_rng(B + P)
+    parts = rng.integers(0, q, size=(radix, B, P), dtype=np.uint32)
+    tw = rng.integers(0, q, size=(B, radix), dtype=np.uint32)
+    tw_sh = np.asarray(shoup_precompute(tw, q))
+    out = butterfly_mac(jnp.asarray(parts), jnp.asarray(tw), jnp.asarray(tw_sh), q=q)
+    ref = butterfly_mac_reference(jnp.asarray(parts), jnp.asarray(tw), jnp.asarray(tw_sh), q=q)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    # independent host check
+    f = Field(q)
+    want = np.zeros((B, P), dtype=np.uint64)
+    for r in range(radix):
+        want = f.add(want, f.mul(parts[r], tw[:, r : r + 1]))
+    np.testing.assert_array_equal(np.asarray(out, dtype=np.uint64), want)
+
+
+def test_butterfly_mac_payload_dims():
+    q = NTT
+    rng = np.random.default_rng(0)
+    parts = rng.integers(0, q, size=(2, 16, 3, 5, 7), dtype=np.uint32)
+    tw = rng.integers(0, q, size=(16, 2), dtype=np.uint32)
+    tw_sh = np.asarray(shoup_precompute(tw, q))
+    out = butterfly_mac(jnp.asarray(parts), jnp.asarray(tw), jnp.asarray(tw_sh), q=q)
+    assert out.shape == (16, 3, 5, 7)
+    ref = butterfly_mac_reference(jnp.asarray(parts), jnp.asarray(tw), jnp.asarray(tw_sh), q=q)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))

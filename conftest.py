@@ -1,0 +1,14 @@
+"""Root conftest: make ``import repro`` work from a plain checkout.
+
+Prepends ``src/`` to sys.path so ``python -m pytest`` (and any tooling that
+imports test modules) works without the ``PYTHONPATH=src`` incantation or an
+editable install. The checkout's ``src/`` deliberately shadows any installed
+``repro`` distribution so the tests always test this tree.
+"""
+
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

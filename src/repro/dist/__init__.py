@@ -1,0 +1,21 @@
+"""Distributed substrate: logical-axis sharding rules, shard_map collectives
+for the paper's round schedules, and GPipe-style pipeline parallelism.
+
+Layering (DESIGN §2): ``core`` computes plans (host numpy, compile-time);
+``dist`` lowers them onto a jax mesh; ``models``/``train``/``serve`` consume
+only :class:`ShardingRules` / :func:`constrain` / :func:`named_sharding` and
+never talk to the mesh directly.
+"""
+
+from .sharding import (  # noqa: F401
+    ShardingRules,
+    constrain,
+    named_sharding,
+    spec_for,
+)
+from .collectives import (  # noqa: F401
+    allgather_encode_jit,
+    butterfly_jit,
+    ps_encode_jit,
+)
+from .pipeline import pipeline_apply, stack_stage_params  # noqa: F401

@@ -1,0 +1,255 @@
+"""shard_map executors for the paper's all-to-all encode schedules.
+
+One processor per mesh-axis slot: an array of global shape ``(K, *payload)``
+is sharded ``P(axis)`` so device ``k`` holds packet ``x_k`` as a ``(1,
+*payload)`` block. Every ``jnp.roll(..., s, axis=0)`` of the single-host
+executors (core/prepare_shoot.py, core/draw_loose.py) becomes exactly one
+``jax.lax.ppermute`` with the uniform shift ``src → (src + s) % K`` — the
+round structure, coefficient tables and masks are consumed from the SAME
+compile-time plans (core/schedule.py), so the mesh path and the single-host
+oracle agree bit-for-bit by construction.
+
+Communication discipline (tested via compiled HLO): the universal encode
+lowers to ``collective-permute`` rounds only — C1 = Tp + Ts rounds with the
+paper's Θ(√K/p) per-port volumes — never to a K-sized ``all-gather``.
+:func:`allgather_encode_jit` is the deliberate baseline that DOES all-gather,
+kept for benchmarks and as the cost-model foil.
+
+All device arithmetic is the uint32-only tier of core/field.py (Shoup
+multiplies by compile-time coefficient duals), so the same bodies lower for
+CPU hosts and TPU.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist._compat import shard_map as _smap
+from repro.core.field import M31, NTT, madd, shoup_mul, shoup_precompute
+from repro.core.schedule import (
+    PrepareShootPlan,
+    butterfly_group_perms,
+    coeff_mask,
+    plan_butterfly,
+    plan_prepare_shoot,
+    shoot_coeff_tensor,
+)
+
+__all__ = [
+    "ps_encode_jit",
+    "allgather_encode_jit",
+    "butterfly_jit",
+    "shoot_round_slots",
+    "expected_permute_count",
+]
+
+
+def _bcast(coef, npay: int):
+    """Append payload broadcast dims to a coefficient array."""
+    return coef.reshape(coef.shape + (1,) * npay)
+
+
+def _shift_perm(K: int, s: int):
+    """ppermute pairs realizing ``jnp.roll(x, s, axis=0)`` on the processor
+    axis: receiver k gets the packet of k - s, i.e. src → (src + s) % K."""
+    return [(src, (src + s) % K) for src in range(K)]
+
+
+# ---------------------------------------------------------------------------
+# universal prepare-and-shoot (§IV)
+# ---------------------------------------------------------------------------
+
+
+def shoot_round_slots(plan: PrepareShootPlan, t: int, rho: int):
+    """(dst_slots, src_slots) for shoot round ``t`` (1-based), port ``rho``:
+    receiver slot ``l`` (digit_t = 0, lower digits 0) absorbs sender slot
+    ``l + rho·(p+1)^{t-1}``. Mirrors prepare_shoot.shoot_rounds exactly; the
+    collective ships ONLY these slots (the paper's digit-t message slices).
+    """
+    radix = plan.p + 1
+    stride = radix ** (t - 1)
+    l = np.arange(plan.n)
+    src = l + rho * stride
+    valid = (src < plan.n) & ((l // stride) % radix == 0) & (l % stride == 0)
+    return l[valid], src[valid]
+
+
+def expected_permute_count(plan: PrepareShootPlan) -> int:
+    """Number of ppermute ops ps_encode_jit emits: p per prepare round plus
+    one per non-empty (round, port) shoot slice — the plan/collective
+    agreement contract checked in tests/test_dist_unit.py."""
+    count = plan.Tp * plan.p
+    for t in range(1, plan.Ts + 1):
+        for rho in range(1, plan.p + 1):
+            dst, _ = shoot_round_slots(plan, t, rho)
+            if dst.size:
+                count += 1
+    return count
+
+
+def ps_encode_jit(mesh, axis: str, A: np.ndarray, *, p: int = 1, q: int = M31):
+    """Jitted mesh executor of the universal encode: ``out = x @ A`` over
+    GF(q) for ANY K×K matrix A, K = mesh.shape[axis].
+
+    Returns ``(fn, plan)``; ``fn`` maps a ``(K, *payload)`` uint32 array
+    (sharded or shardable over ``axis``) to the encoded array of the same
+    shape. A is a host array: the shoot coefficients and their Shoup duals
+    are baked in as per-device compile-time constants.
+    """
+    K = int(mesh.shape[axis])
+    A = np.asarray(A)
+    if A.shape != (K, K):
+        raise ValueError(f"A must be ({K}, {K}) to match mesh axis {axis!r}, got {A.shape}")
+    plan = plan_prepare_shoot(K, p)
+    radix = p + 1
+    m, n = plan.m, plan.n
+    mask = coeff_mask(plan)  # (m, n) bool, first-coverage exactness
+    coef = (shoot_coeff_tensor(plan, A) * mask[None, :, :]).astype(np.uint32)  # (K, m, n)
+    coef_shoup = shoup_precompute(coef, q)
+
+    def body(x, cf, cfs):
+        # x: (1, *payload) — this device's packet; cf/cfs: (1, m, n)
+        npay = x.ndim - 1
+        # ---- prepare phase: Tp rounds, message = whole buffer (Lemma 3) ---
+        buf = x[:, None]  # (1, 1, *payload)
+        for shifts in plan.prepare_shifts:
+            parts = [buf]
+            for s in shifts:
+                parts.append(jax.lax.ppermute(buf, axis, _shift_perm(K, s % K)))
+            buf = jnp.concatenate(parts, axis=1)
+        # ---- w-init: modular contraction with baked Shoup coefficients ----
+        cols = []
+        for l in range(n):
+            acc = None
+            for u in range(m):
+                term = shoup_mul(
+                    buf[:, u], _bcast(cf[:, u, l], npay), _bcast(cfs[:, u, l], npay), q
+                )
+                acc = term if acc is None else madd(acc, term, q)
+            cols.append(acc)
+        w = jnp.stack(cols, axis=1)  # (1, n, *payload)
+        # ---- shoot phase: Ts rounds, digit-t slices only -----------------
+        for t, shifts in enumerate(plan.shoot_shifts, start=1):
+            acc = w
+            for rho, s in enumerate(shifts, start=1):
+                dst, src = shoot_round_slots(plan, t, rho)
+                if dst.size == 0:
+                    continue
+                payload = jnp.take(w, jnp.asarray(src), axis=1)
+                payload = jax.lax.ppermute(payload, axis, _shift_perm(K, s % K))
+                # scatter the received slices into their target slots
+                pos = np.full(n, dst.size, dtype=np.int64)
+                pos[dst] = np.arange(dst.size)
+                padded = jnp.concatenate(
+                    [payload, jnp.zeros_like(w[:, :1])], axis=1
+                )
+                acc = madd(acc, jnp.take(padded, jnp.asarray(pos), axis=1), q)
+            w = acc
+        return w[:, 0]
+
+    mapped = _smap(body, mesh, in_specs=(P(axis), P(axis), P(axis)), out_specs=P(axis))
+    cf_dev = jnp.asarray(coef)
+    cfs_dev = jnp.asarray(coef_shoup)
+    fn = jax.jit(lambda x: mapped(x, cf_dev, cfs_dev))
+    return fn, plan
+
+
+def allgather_encode_jit(mesh, axis: str, A: np.ndarray, *, q: int = M31):
+    """Baseline mesh encode: all-gather every packet, then each device
+    contracts locally with its own column of A — C1 = O(log K) but
+    C2 = Θ(K/p). Kept as the benchmark/cost-model foil for ps_encode_jit."""
+    K = int(mesh.shape[axis])
+    A = np.asarray(A)
+    if A.shape != (K, K):
+        raise ValueError(f"A must be ({K}, {K}), got {A.shape}")
+    # device k needs column A[:, k]: ship as a (K, K) array sharded on dim 0
+    cols = np.ascontiguousarray(A.T).astype(np.uint32)  # cols[k, j] = A[j, k]
+    cols_shoup = shoup_precompute(cols, q)
+
+    def body(x, c, cs):
+        # x: (1, *payload); c/cs: (1, K)
+        npay = x.ndim - 1
+        xs = jax.lax.all_gather(x, axis, axis=0, tiled=True)  # (K, *payload)
+        acc = None
+        for j in range(K):
+            term = shoup_mul(xs[j], _bcast(c[0, j], npay), _bcast(cs[0, j], npay), q)
+            acc = term if acc is None else madd(acc, term, q)
+        return acc[None]
+
+    mapped = _smap(body, mesh, in_specs=(P(axis), P(axis), P(axis)), out_specs=P(axis))
+    c_dev = jnp.asarray(cols)
+    cs_dev = jnp.asarray(cols_shoup)
+    return jax.jit(lambda x: mapped(x, c_dev, cs_dev))
+
+
+# ---------------------------------------------------------------------------
+# radix-(p+1) DFT butterfly (§V-A)
+# ---------------------------------------------------------------------------
+
+
+def butterfly_jit(
+    mesh, axis: str, *, p: int = 1, q: int = NTT, inverse: bool = False
+):
+    """Jitted mesh butterfly: forward computes ``x @ butterfly_target_matrix``
+    (the digit-reversed K-point DFT), inverse undoes it exactly (Lemma 5).
+
+    Returns ``(fn, plan)``. Round t exchanges within digit-t groups via
+    radix-1 ppermutes and combines with the plan's (inverse) twiddles —
+    C1 = C2 = H rounds/elements, mirroring core/draw_loose.butterfly_apply.
+    """
+    K = int(mesh.shape[axis])
+    plan = plan_butterfly(K, p, q)
+    radix = plan.radix
+    k = np.arange(K)
+    order = range(plan.H - 1, -1, -1) if inverse else range(plan.H)
+    rounds = []
+    for t in order:
+        tw = plan.inv_twiddles[t] if inverse else plan.twiddles[t]
+        tw_sh = plan.inv_twiddles_shoup[t] if inverse else plan.twiddles_shoup[t]
+        step = radix**t
+        digit = (k // step) % radix
+        perms = butterfly_group_perms(K, radix, t)  # dst arrays for d=1..radix-1
+        # delta d: received value came from the group member with digit_t =
+        # (digit_k - d) % radix; pick that sender's coefficient column.
+        coefs, coefs_sh = [], []
+        for d in range(radix):
+            rho = (digit - d) % radix
+            coefs.append(tw[k, rho].astype(np.uint32))
+            coefs_sh.append(tw_sh[k, rho].astype(np.uint32))
+        perm_pairs = [
+            [(src, int(dst[src])) for src in range(K)] for dst in perms
+        ]
+        rounds.append((perm_pairs, np.stack(coefs), np.stack(coefs_sh)))
+
+    # coefficient tensor: (H, radix, K) → shard on the K dim
+    cf = np.stack([r[1] for r in rounds])
+    cf_sh = np.stack([r[2] for r in rounds])
+
+    def body(v, c, cs):
+        # v: (1, *payload); c/cs: (H, radix, 1)
+        npay = v.ndim - 1
+        for r_i, (perm_pairs, _, _) in enumerate(rounds):
+            acc = shoup_mul(
+                v, _bcast(c[r_i, 0], npay), _bcast(cs[r_i, 0], npay), q
+            )
+            for d in range(1, radix):
+                recv = jax.lax.ppermute(v, axis, perm_pairs[d - 1])
+                term = shoup_mul(
+                    recv, _bcast(c[r_i, d], npay), _bcast(cs[r_i, d], npay), q
+                )
+                acc = madd(acc, term, q)
+            v = acc
+        return v
+
+    mapped = _smap(
+        body, mesh, in_specs=(P(axis), P(None, None, axis), P(None, None, axis)),
+        out_specs=P(axis),
+    )
+    c_dev = jnp.asarray(cf)
+    cs_dev = jnp.asarray(cf_sh)
+    fn = jax.jit(lambda x: mapped(x, c_dev, cs_dev))
+    return fn, plan

@@ -1,0 +1,62 @@
+"""GPipe-style pipeline parallelism over a mesh axis.
+
+``stack_stage_params`` stacks the S per-stage param pytrees on a new leading
+axis; sharding that axis over the pipeline mesh axis gives every device its
+own stage's weights. ``pipeline_apply`` then runs the classic synchronous
+GPipe schedule: N microbatches flow through S stages in N + S - 1 ticks,
+with a single uniform ``ppermute`` (shift by +1 on the pipeline axis) moving
+activations between neighbors each tick — the same TPU-native uniform-shift
+communication discipline as the encode collectives (DESIGN §3).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist._compat import shard_map as _shard_map
+
+__all__ = ["stack_stage_params", "pipeline_apply"]
+
+
+def stack_stage_params(stage_params: list):
+    """[params_0, .., params_{S-1}] → one pytree with a leading stage axis."""
+    return jax.tree.map(lambda *leaves: jnp.stack(leaves, axis=0), *stage_params)
+
+
+def pipeline_apply(stage_fn, stacked_params, x, *, mesh, axis: str):
+    """Apply S = mesh.shape[axis] stages in sequence to every microbatch.
+
+    ``stage_fn(params, mb)`` is one stage; ``stacked_params`` has leading
+    dim S (see :func:`stack_stage_params`); ``x`` is ``(N, *mb_shape)`` —
+    N microbatches. Returns ``(N, *mb_shape)`` with
+    ``out[i] = stage_{S-1}(... stage_0(x[i]))``.
+
+    Schedule: tick t ∈ [0, N+S-1): device d applies its stage to microbatch
+    t - d (when in range), then shifts its activation to device d+1. Device
+    S-1's results are psum-broadcast back so the output is replicated.
+    """
+    S = int(mesh.shape[axis])
+    N = x.shape[0]
+
+    def body(params, xx):
+        params = jax.tree.map(lambda a: a[0], params)  # (1, ...) → stage params
+        d = jax.lax.axis_index(axis)
+        state = jnp.zeros(xx.shape[1:], xx.dtype)
+        outs = jnp.zeros_like(xx)
+        shift = [(i, (i + 1) % S) for i in range(S)]
+        for t in range(N + S - 1):
+            # stage 0 ingests microbatch t; others consume the neighbor's
+            # activation (garbage during fill/drain never reaches `outs`)
+            inp = jnp.where(d == 0, xx[t % N], state)
+            y = stage_fn(params, inp.astype(xx.dtype))
+            mb = t - (S - 1)
+            if mb >= 0:
+                outs = outs.at[mb].set(jnp.where(d == S - 1, y, outs[mb]))
+            state = jax.lax.ppermute(y, axis, shift)
+        # replicate the last stage's outputs to every device
+        return jax.lax.psum(jnp.where(d == S - 1, outs, jnp.zeros_like(outs)), axis)
+
+    mapped = _shard_map(body, mesh, in_specs=(P(axis), P()), out_specs=P())
+    return mapped(stacked_params, x)

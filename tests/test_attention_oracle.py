@@ -3,7 +3,7 @@ decode-vs-forward consistency (absorbed decode == decompressed forward)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hyputil import given, settings, st
 
 import jax
 import jax.numpy as jnp

@@ -3,7 +3,7 @@ coding, Lagrange coded computing."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hyputil import given, settings, st
 
 import jax
 import jax.numpy as jnp

@@ -32,7 +32,8 @@ def test_ps_encode_and_baseline_collectives():
     run_child(
         """
         import numpy as np, jax, jax.numpy as jnp
-        mesh = jax.make_mesh((8,), ("enc",), axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((8,), ("enc",))
         from repro.core.field import M31, Field
         from repro.core.matrices import random_matrix, random_vector
         from repro.core.prepare_shoot import encode_oracle
@@ -59,7 +60,8 @@ def test_butterfly_collective_and_inverse():
     run_child(
         """
         import numpy as np, jax, jax.numpy as jnp
-        mesh = jax.make_mesh((8,), ("enc",), axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((8,), ("enc",))
         from repro.core.field import NTT, Field
         from repro.core.matrices import butterfly_target_matrix, random_vector
         from repro.core.prepare_shoot import encode_oracle
@@ -84,7 +86,8 @@ def test_collective_hlo_has_permutes_not_allgather():
     out = run_child(
         """
         import numpy as np, jax, jax.numpy as jnp
-        mesh = jax.make_mesh((8,), ("enc",), axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((8,), ("enc",))
         from repro.core.field import M31, Field
         from repro.core.matrices import random_matrix
         from repro.dist.collectives import ps_encode_jit
@@ -106,7 +109,8 @@ def test_pipeline_gpipe():
     run_child(
         """
         import numpy as np, jax, jax.numpy as jnp
-        mesh = jax.make_mesh((4,), ("pipe",), axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4,), ("pipe",))
         from repro.dist.pipeline import pipeline_apply, stack_stage_params
 
         def stage(params, x):
@@ -133,12 +137,47 @@ def test_pipeline_gpipe():
     )
 
 
+def test_coded_checkpoint_collective_roundtrip():
+    """The coded-checkpoint mesh path (rs_checkpoint.encode_parity_collective
+    → dist.collectives.ps_encode_jit) produces the same parity packets as the
+    single-program path, and the recovery solve is bit-exact from them."""
+    run_child(
+        """
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.launch.mesh import make_mesh
+        from repro.coded.rs_checkpoint import (
+            build_parity_plan, encode_parity, encode_parity_collective, recover_lost)
+
+        K = 8
+        mesh = make_mesh((8,), ("dp",))
+        plan = build_parity_plan(K, p=1)
+        rng = np.random.default_rng(3)
+        shards = rng.integers(0, 1 << 16, size=(K, 32), dtype=np.uint32)
+        fn = encode_parity_collective(mesh, "dp", plan)
+        parity = np.asarray(fn(jnp.asarray(shards)), dtype=np.uint64)
+        ref = np.asarray(encode_parity(jnp.asarray(shards), plan), dtype=np.uint64)
+        np.testing.assert_array_equal(parity, ref)
+        lost = [1, 6]
+        rec = recover_lost(
+            plan, lost,
+            {k: shards[k].astype(np.uint64) for k in range(K) if k not in lost},
+            {k: parity[k] for k in range(K) if k not in lost},
+        )
+        for k in lost:
+            np.testing.assert_array_equal(rec[k], shards[k].astype(np.uint64))
+        print("OK")
+        """
+    )
+
+
 def test_sharding_rules_divisibility():
     """Divisibility-aware logical→physical mapping (no subprocess needed)."""
     import jax
-    from repro.dist.sharding import ShardingRules, spec_for
 
-    mesh = jax.make_mesh((1,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.dist.sharding import ShardingRules, spec_for
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1,), ("model",))
     rules = ShardingRules()
     # divisible dim → sharded; non-divisible → replicated
     s1 = spec_for(mesh, rules, ("batch", "d_ff"), (4, 16))

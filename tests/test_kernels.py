@@ -3,7 +3,7 @@ shape and prime sweeps + hypothesis property tests."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hyputil import given, settings, st
 
 import jax.numpy as jnp
 

@@ -1,0 +1,115 @@
+"""Topology benchmark: flat vs. hierarchical encode on 8 forced-host devices.
+
+Times ``ps_encode_jit`` (1D mesh), ``hierarchical_encode_jit`` (4×2
+inter×intra mesh) and the ``allgather_encode_jit`` foil on the same
+Vandermonde encode, in a subprocess with
+``--xla_force_host_platform_device_count=8`` (the override must not leak
+into sibling benchmarks). Emits ``results/BENCH_topology.json`` with the
+measured wall times next to the autotuner's α-β predictions on the matching
+two-level topology — the JSON's ``measured_s`` map (seconds) feeds straight
+back into ``autotune(..., measured=...)`` and ``launch/perf_report.py``
+renders the table.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from .common import emit
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_CHILD = """
+    import json, time
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.launch.mesh import make_mesh
+    from repro.core.field import M31, Field
+    from repro.core.matrices import distinct_points, vandermonde, random_vector
+    from repro.dist.collectives import (
+        allgather_encode_jit, hierarchical_encode_jit, ps_encode_jit)
+
+    K, PAY = 8, 1 << 14
+    f = Field(M31)
+    A = np.asarray(vandermonde(f, distinct_points(f, K, seed=0)))
+    x = jnp.asarray(random_vector(f, (K, PAY), seed=1).astype(np.uint32))
+
+    def timeit(fn, iters=5):
+        jax.block_until_ready(fn(x))
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(x))
+            ts.append((time.perf_counter() - t0) * 1e6)
+        ts.sort()
+        return ts[len(ts) // 2]
+
+    mesh1 = make_mesh((8,), ("enc",))
+    mesh2 = make_mesh((4, 2), ("inter", "intra"))
+    fn_ps, _ = ps_encode_jit(mesh1, "enc", A, p=1)
+    fn_h, _ = hierarchical_encode_jit(mesh2, "inter", "intra", A, p=1)
+    fn_ag = allgather_encode_jit(mesh1, "enc", A)
+    o1, o2 = np.asarray(fn_ps(x)), np.asarray(fn_h(x))
+    assert np.array_equal(o1, o2), "flat and hierarchical disagree"
+    print(json.dumps({
+        "prepare-shoot": timeit(fn_ps),
+        "hierarchical": timeit(fn_h),
+        "allgather": timeit(fn_ag),
+    }))
+"""
+
+
+def run():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_CHILD)],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    if r.returncode != 0:
+        raise RuntimeError(f"bench_topology child failed:\n{r.stdout}\n{r.stderr}")
+    measured_us = json.loads(r.stdout.strip().splitlines()[-1])
+
+    # α-β predictions for the same scenario on the matching two-level mesh
+    from repro.topo import TwoLevel, autotune
+
+    K, PAY = 8, 1 << 14
+    topo = TwoLevel(k_intra=2, k_inter=4)
+    result = autotune(K, 1, PAY * 4, topo, generator="vandermonde")
+    predicted = {
+        c.algorithm: {"us": c.predicted_time * 1e6, "c1": c.c1, "c2": c.c2}
+        for c in result.candidates
+    }
+    record = {
+        "K": K,
+        "p": 1,
+        "payload_elems": PAY,
+        "mesh": "4x2 (inter x intra), forced-host",
+        "topology": "two-level k_intra=2 k_inter=4",
+        "autotuner_choice": result.algorithm,
+        "measured_us": measured_us,
+        # seconds, the unit autotune(..., measured=...) compares against
+        "measured_s": {alg: us * 1e-6 for alg, us in measured_us.items()},
+        "predicted": predicted,
+    }
+    os.makedirs(os.path.join(REPO, "results"), exist_ok=True)
+    with open(os.path.join(REPO, "results", "BENCH_topology.json"), "w") as fh:
+        json.dump(record, fh, indent=2)
+    for alg, us in measured_us.items():
+        pred = predicted.get(alg, {})
+        emit(
+            f"topology_encode_{alg}_K8_4x2",
+            us,
+            f"pred_us={pred.get('us', float('nan')):.1f},C1={pred.get('c1', '-')}",
+        )
+
+
+if __name__ == "__main__":
+    run()

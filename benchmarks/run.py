@@ -16,7 +16,8 @@ def main() -> None:
         bench_kernels,        # DESIGN §7 kernels
         bench_coded_ckpt,     # Remark 1 application (coded checkpointing)
         bench_gradient_coding,# straggler mitigation application
-        bench_dryrun_roofline # deliverable (g) table
+        bench_dryrun_roofline,# deliverable (g) table
+        bench_topology,       # repro.topo: flat vs hierarchical on 8 devices
     )
 
     print("name,us_per_call,derived")
@@ -30,6 +31,7 @@ def main() -> None:
         bench_coded_ckpt,
         bench_gradient_coding,
         bench_dryrun_roofline,
+        bench_topology,
     ):
         try:
             mod.run()

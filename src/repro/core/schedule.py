@@ -106,17 +106,36 @@ def live_slots(plan: PrepareShootPlan) -> int:
     return -(-plan.K // plan.m)
 
 
+def digit_reduction_slots(n: int, p: int, t: int, rho: int):
+    """(dst_slots, src_slots) of the §IV digit-reduction over ``n`` slots,
+    round ``t`` (1-based), port ``rho``: receiver slot l (digit_t = 0, lower
+    digits 0) absorbs sender slot l + rho·(p+1)^{t-1}. The single source of
+    truth for the shoot/inter-shoot slot algebra (dist.collectives and
+    topo.hierarchical delegate here)."""
+    radix = p + 1
+    stride = radix ** (t - 1)
+    l = np.arange(n)
+    src = l + rho * stride
+    valid = (src < n) & ((l // stride) % radix == 0) & (l % stride == 0)
+    return l[valid], src[valid]
+
+
+def digit_reduction_message_size(n: int, n_live: int, p: int, t: int, rho: int) -> int:
+    """Live elements shipped on port rho in round t: the digit-reduction's
+    sender slots below ``n_live`` (slots l ≥ n_live are identically zero)."""
+    radix = p + 1
+    stride = radix ** (t - 1)
+    return sum(
+        1
+        for l in range(n)
+        if (l // stride) % radix == rho and l % stride == 0 and l < n_live
+    )
+
+
 def shoot_round_message_size(plan: PrepareShootPlan, t: int, rho: int) -> int:
     """Elements sent on port rho in shoot round t (1-based): the live slots
     {l : digit_t(l) = rho, lower digits 0, l*m < K}."""
-    radix = plan.p + 1
-    stride = radix ** (t - 1)
-    nl = live_slots(plan)
-    return sum(
-        1
-        for l in range(plan.n)
-        if (l // stride) % radix == rho and l % stride == 0 and l < nl
-    )
+    return digit_reduction_message_size(plan.n, live_slots(plan), plan.p, t, rho)
 
 
 def counted_c2(plan: PrepareShootPlan) -> int:

@@ -36,6 +36,10 @@ class SimStats:
     C2: int = 0
     round_sizes: list = dc_field(default_factory=list)
     total_elements: int = 0  # Σ over all messages (not just max) — extra info
+    # per-round message map {(src, dst): elements} — the exact communication
+    # pattern, consumed by repro.topo.lower to cross-check its analytically
+    # lowered schedules (hop counts, link contention) against the simulation
+    round_messages: list = dc_field(default_factory=list)
 
 
 class SyncSimulator:
@@ -73,6 +77,9 @@ class SyncSimulator:
         self.stats.C2 += d
         self.stats.round_sizes.append(d)
         self.stats.total_elements += sum(len(v) for v in messages.values())
+        self.stats.round_messages.append(
+            {pair: len(v) for pair, v in messages.items()}
+        )
         return messages
 
 

@@ -34,6 +34,7 @@ from repro.core.schedule import (
     PrepareShootPlan,
     butterfly_group_perms,
     coeff_mask,
+    digit_reduction_slots,
     plan_butterfly,
     plan_prepare_shoot,
     shoot_coeff_tensor,
@@ -43,8 +44,10 @@ __all__ = [
     "ps_encode_jit",
     "allgather_encode_jit",
     "butterfly_jit",
+    "hierarchical_encode_jit",
     "shoot_round_slots",
     "expected_permute_count",
+    "expected_hier_permute_count",
 ]
 
 
@@ -70,12 +73,7 @@ def shoot_round_slots(plan: PrepareShootPlan, t: int, rho: int):
     ``l + rho·(p+1)^{t-1}``. Mirrors prepare_shoot.shoot_rounds exactly; the
     collective ships ONLY these slots (the paper's digit-t message slices).
     """
-    radix = plan.p + 1
-    stride = radix ** (t - 1)
-    l = np.arange(plan.n)
-    src = l + rho * stride
-    valid = (src < plan.n) & ((l // stride) % radix == 0) & (l % stride == 0)
-    return l[valid], src[valid]
+    return digit_reduction_slots(plan.n, plan.p, t, rho)
 
 
 def expected_permute_count(plan: PrepareShootPlan) -> int:
@@ -184,6 +182,117 @@ def allgather_encode_jit(mesh, axis: str, A: np.ndarray, *, q: int = M31):
     c_dev = jnp.asarray(cols)
     cs_dev = jnp.asarray(cols_shoup)
     return jax.jit(lambda x: mapped(x, c_dev, cs_dev))
+
+
+# ---------------------------------------------------------------------------
+# two-level hierarchical encode (repro.topo.hierarchical) on a 2D mesh
+# ---------------------------------------------------------------------------
+
+
+def expected_hier_permute_count(plan) -> int:
+    """ppermute budget of hierarchical_encode_jit: one per non-empty intra
+    gather port plus one per inter (round, port) with live slots — the
+    plan/collective agreement contract (mirrors expected_permute_count)."""
+    from repro.topo.hierarchical import hier_shoot_message_size
+
+    count = sum(len(ports) for ports in plan.intra_rounds)
+    for t in range(1, len(plan.inter_shifts) + 1):
+        for rho in range(1, plan.p + 1):
+            if hier_shoot_message_size(plan, t, rho):
+                count += 1
+    return count
+
+
+def hierarchical_encode_jit(
+    mesh,
+    inter_axis: str,
+    intra_axis: str,
+    A: np.ndarray,
+    *,
+    p: int = 1,
+    q: int = M31,
+):
+    """Jitted two-level mesh executor of the universal encode: ``out = x @ A``
+    over GF(q) for ANY K×K matrix A, K = mesh.shape[inter_axis] ×
+    mesh.shape[intra_axis]; device (g, i) holds packet k = g·I + i.
+
+    Three phases (repro.topo.hierarchical — the topology-aligned schedule):
+    (p+1)-ary doubling all-gather over the fast ``intra_axis``, a local Shoup
+    contraction against baked per-device coefficients, then the §IV
+    digit-reduction shoot over the slow ``inter_axis``. Every round is
+    ppermutes on exactly one mesh axis, so intra traffic never crosses the
+    slow domain. Bit-exact vs. the single-level ``ps_encode_jit`` /
+    ``encode_oracle`` (modular sums reassociate exactly).
+
+    Returns ``(fn, plan)`` with plan a :class:`HierarchicalPlan`.
+    """
+    from repro.topo.hierarchical import (
+        hier_shoot_slots,
+        hierarchical_coeff_tensor,
+        plan_hierarchical,
+    )
+
+    G = int(mesh.shape[inter_axis])
+    I = int(mesh.shape[intra_axis])
+    K = G * I
+    A = np.asarray(A)
+    if A.shape != (K, K):
+        raise ValueError(
+            f"A must be ({K}, {K}) to match mesh axes "
+            f"({inter_axis!r}×{intra_axis!r}), got {A.shape}"
+        )
+    plan = plan_hierarchical(K, p, k_intra=I)
+    n = plan.n_inter
+    coef = hierarchical_coeff_tensor(plan, A).astype(np.uint32)  # (K, I, n)
+    coef_shoup = shoup_precompute(coef, q)
+    axes2d = (inter_axis, intra_axis)
+
+    def body(x, cf, cfs):
+        # x: (1, *payload) — packet of device (g, i); cf/cfs: (1, I, n)
+        npay = x.ndim - 1
+        # ---- intra gather: buf[:, u] = x_{g, (i-u) % I} -------------------
+        buf = x[:, None]
+        for ports in plan.intra_rounds:
+            parts = [buf]
+            for s, cnt in ports:
+                parts.append(
+                    jax.lax.ppermute(buf[:, :cnt], intra_axis, _shift_perm(I, s))
+                )
+            buf = jnp.concatenate(parts, axis=1)
+        # ---- local contraction: z[l] = Σ_u buf[u]·A[(g,i-u), ((g+l)%G, i)] -
+        cols = []
+        for l in range(n):
+            acc = None
+            for u in range(I):
+                term = shoup_mul(
+                    buf[:, u], _bcast(cf[:, u, l], npay), _bcast(cfs[:, u, l], npay), q
+                )
+                acc = term if acc is None else madd(acc, term, q)
+            cols.append(acc)
+        z = jnp.stack(cols, axis=1)  # (1, n, *payload)
+        # ---- inter shoot: digit-reduce the group offset toward slot 0 -----
+        for t, shifts in enumerate(plan.inter_shifts, start=1):
+            acc = z
+            for rho, s in enumerate(shifts, start=1):
+                dst, src = hier_shoot_slots(n, p, t, rho)
+                if dst.size == 0 or not np.any(src < plan.k_inter):
+                    continue  # nothing live on this port
+                payload = jnp.take(z, jnp.asarray(src), axis=1)
+                payload = jax.lax.ppermute(payload, inter_axis, _shift_perm(G, s % G))
+                pos = np.full(n, dst.size, dtype=np.int64)
+                pos[dst] = np.arange(dst.size)
+                padded = jnp.concatenate([payload, jnp.zeros_like(z[:, :1])], axis=1)
+                acc = madd(acc, jnp.take(padded, jnp.asarray(pos), axis=1), q)
+            z = acc
+        return z[:, 0]
+
+    mapped = _smap(
+        body, mesh, in_specs=(P(axes2d), P(axes2d), P(axes2d)), out_specs=P(axes2d)
+    )
+    cf_dev = jnp.asarray(coef)
+    cfs_dev = jnp.asarray(coef_shoup)
+    fn = jax.jit(lambda x: mapped(x, cf_dev, cfs_dev))
+    return fn, plan
 
 
 # ---------------------------------------------------------------------------

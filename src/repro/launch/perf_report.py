@@ -1,4 +1,7 @@
-"""Render EXPERIMENTS.md §Perf from results/perf_iterations.jsonl."""
+"""Render EXPERIMENTS.md §Perf from results/perf_iterations.jsonl, and the
+topology validation table from results/BENCH_topology.json (predicted α-β
+time vs. measured wall time per algorithm — the autotuner calibration
+input)."""
 
 from __future__ import annotations
 
@@ -32,5 +35,31 @@ def render(log_path: str = "results/perf_iterations.jsonl") -> str:
     return "\n".join(out)
 
 
+def render_topology(path: str = "results/BENCH_topology.json") -> str:
+    r = json.load(open(path))
+    out = [
+        f"Topology benchmark — K={r['K']}, p={r['p']}, payload "
+        f"{r['payload_elems']} elems, mesh {r['mesh']}, model {r['topology']}; "
+        f"autotuner choice: **{r['autotuner_choice']}**",
+        "",
+        "| algorithm | C1 | C2 | predicted µs | measured µs |",
+        "|---|---|---|---|---|",
+    ]
+    for alg, pred in r["predicted"].items():
+        meas = r["measured_us"].get(alg)
+        out.append(
+            f"| {alg} | {pred['c1']} | {pred['c2']} | {pred['us']:.1f} | "
+            f"{f'{meas:.1f}' if meas is not None else '—'} |"
+        )
+    out.append("")
+    out.append(
+        "Measured numbers come from forced-host CPU meshes (collective "
+        "emulation, not ICI) — feed them back via `autotune(..., measured=...)` "
+        "rather than comparing across columns directly."
+    )
+    return "\n".join(out)
+
+
 if __name__ == "__main__":
-    print(render(sys.argv[1] if len(sys.argv) > 1 else "results/perf_iterations.jsonl"))
+    arg = sys.argv[1] if len(sys.argv) > 1 else "results/perf_iterations.jsonl"
+    print(render_topology(arg) if arg.endswith(".json") else render(arg))

@@ -1,0 +1,43 @@
+# Topology-aware layer over the flat p-port model (ROADMAP: "as fast as the
+# hardware allows" on real, hierarchical networks).
+#
+# - model.py         declarative topologies (flat, ring, torus, two-level) +
+#                    α-β time estimation of arbitrary round schedules
+# - lower.py         plan → explicit per-round message maps, hop counts,
+#                    link contention (cross-checked vs. the exact simulator)
+# - hierarchical.py  two-level prepare-and-shoot, Cooley–Tukey two-level DFT,
+#                    ring-optimized schedule + their exact simulators
+# - autotune.py      per-(K, p, payload, topology) algorithm selection with
+#                    a measured-override calibration hook
+#
+# The mesh executor for the hierarchical schedule lives in
+# dist/collectives.hierarchical_encode_jit (dist lowers plans, as always).
+
+from .autotune import Candidate, TuneResult, autotune, candidates_for  # noqa: F401
+from .hierarchical import (  # noqa: F401
+    HierarchicalPlan,
+    RingPlan,
+    TwoLevelDFTPlan,
+    hierarchical_coeff_tensor,
+    plan_hierarchical,
+    plan_ring,
+    plan_two_level_dft,
+    simulate_hierarchical,
+    simulate_ring_encode,
+    simulate_two_level_dft,
+    two_level_dft_matrix,
+)
+from .lower import LoweredSchedule, lower, lower_allgather  # noqa: F401
+from .model import (  # noqa: F401
+    DCI,
+    ICI,
+    FullyConnected,
+    LinkCost,
+    Ring,
+    TimeEstimate,
+    Topology,
+    Torus2D,
+    TwoLevel,
+    make_topology,
+    schedule_time,
+)

@@ -1,0 +1,178 @@
+"""Algorithm autotuner: pick the fastest encode schedule for a scenario.
+
+Given (K, p, payload bytes, topology, generator kind) the tuner builds every
+applicable plan — prepare-shoot, draw-loose, butterfly, all-gather, ring, and
+the two hierarchical schedules — lowers each onto the topology, prices it
+with the α-β estimator, and returns the cheapest. Related work shows the
+winner genuinely flips with topology (ring networks favor neighbor-only
+schedules; two-level meshes favor level-aligned ones), which is exactly what
+the estimator captures through per-link contention.
+
+Applicability matrix (the "universal promise" vs. structured generators):
+
+* ``general``      — prepare-shoot, hierarchical, allgather, ring
+* ``vandermonde``  — the above + draw-loose
+* ``dft``          — all of the above + butterfly + hierarchical-dft
+
+A ``measured`` override hook replaces predicted times with wall-clock
+numbers (e.g. from benchmarks/bench_topology.py) without changing the
+selection logic — the calibration path the ROADMAP's follow-on names.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+from repro.core.field import M31
+from repro.core.schedule import plan_butterfly, plan_draw_loose, plan_prepare_shoot
+
+from .hierarchical import plan_hierarchical, plan_ring, plan_two_level_dft
+from .lower import LoweredSchedule, lower, lower_allgather
+from .model import TimeEstimate, Topology, TwoLevel
+
+GENERATOR_KINDS = ("general", "vandermonde", "dft")
+
+# deterministic tie-break: structured algorithms first (they generalize
+# less), flat-canonical schedules before their two-level equivalents
+_PREFERENCE = (
+    "butterfly",
+    "hierarchical-dft",
+    "draw-loose",
+    "prepare-shoot",
+    "hierarchical",
+    "ring",
+    "allgather",
+)
+
+
+@dataclass(frozen=True)
+class Candidate:
+    algorithm: str
+    plan: object  # schedule plan (None for the plan-less allgather baseline)
+    lowered: LoweredSchedule
+    estimate: TimeEstimate
+    measured_time: float | None = None
+
+    @property
+    def c1(self) -> int:
+        return self.lowered.c1
+
+    @property
+    def c2(self) -> int:
+        return self.lowered.c2
+
+    @property
+    def predicted_time(self) -> float:
+        return self.estimate.total
+
+    @property
+    def time(self) -> float:
+        return self.measured_time if self.measured_time is not None else self.estimate.total
+
+
+@dataclass(frozen=True)
+class TuneResult:
+    chosen: Candidate
+    candidates: tuple[Candidate, ...]  # sorted fastest-first
+
+    @property
+    def algorithm(self) -> str:
+        return self.chosen.algorithm
+
+
+def _split_for(topo: Topology, K: int) -> int:
+    """k_intra for the hierarchical schedules: the topology's own fast-domain
+    size when it has one, else the most balanced divisor."""
+    if isinstance(topo, TwoLevel) and K % topo.k_intra == 0:
+        return topo.k_intra
+    from .model import _near_square
+
+    return _near_square(K)
+
+
+def candidates_for(
+    K: int,
+    p: int,
+    topo: Topology,
+    *,
+    q: int = M31,
+    payload_elems: int = 1,
+    generator: str = "general",
+    seed: int = 0,
+) -> list[Candidate]:
+    if generator not in GENERATOR_KINDS:
+        raise ValueError(f"generator must be one of {GENERATOR_KINDS}")
+
+    def cand(plan, lowered=None):
+        low = lowered if lowered is not None else lower(plan)
+        return Candidate(
+            algorithm=low.algorithm,
+            plan=plan,
+            lowered=low,
+            estimate=low.time(topo, payload_elems),
+        )
+
+    out = [
+        cand(plan_prepare_shoot(K, p)),
+        cand(None, lowered=lower_allgather(K, p)),
+        cand(plan_ring(K, p)),
+    ]
+    k_intra = _split_for(topo, K)
+    if 1 < k_intra < K:
+        out.append(cand(plan_hierarchical(K, p, k_intra)))
+    if generator in ("vandermonde", "dft"):
+        try:
+            out.append(cand(plan_draw_loose(K, p, q, seed=seed)))
+        except (ValueError, RuntimeError):
+            pass  # field too small / no valid phi — not applicable
+    if generator == "dft":
+        try:
+            out.append(cand(plan_butterfly(K, p, q)))
+        except ValueError:
+            pass  # K not a power of p+1 or K ∤ q-1
+        for ki in dict.fromkeys((k_intra, _dft_split(K, p))):
+            if ki is None or not (1 < ki < K):
+                continue
+            try:
+                out.append(cand(plan_two_level_dft(K, p, q, ki)))
+                break
+            except ValueError:
+                continue
+    return out
+
+
+def _dft_split(K: int, p: int) -> int | None:
+    """Balanced K = I·G with both factors powers of p+1 (needs K a power)."""
+    from repro.core.bounds import ceil_log
+
+    radix = p + 1
+    H = ceil_log(K, radix)
+    if radix**H != K or H < 2:
+        return None
+    return radix ** (H // 2)
+
+
+def autotune(
+    K: int,
+    p: int,
+    payload_bytes: int,
+    topo: Topology,
+    *,
+    q: int = M31,
+    generator: str = "general",
+    measured: dict[str, float] | None = None,
+    seed: int = 0,
+) -> TuneResult:
+    """Pick the cheapest applicable algorithm for this scenario. ``measured``
+    maps algorithm name → measured seconds, overriding the α-β prediction."""
+    payload_elems = max(1, payload_bytes // 4)
+    cands = candidates_for(
+        K, p, topo, q=q, payload_elems=payload_elems, generator=generator, seed=seed
+    )
+    if measured:
+        cands = [
+            replace(c, measured_time=measured.get(c.algorithm, c.measured_time))
+            for c in cands
+        ]
+    ranked = sorted(cands, key=lambda c: (c.time, _PREFERENCE.index(c.algorithm)))
+    return TuneResult(chosen=ranked[0], candidates=tuple(ranked))

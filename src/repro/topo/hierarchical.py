@@ -1,0 +1,453 @@
+"""Two-level (hierarchical) all-to-all encode schedules.
+
+K = K_inter × K_intra processors, k = g·K_intra + i: group ``g`` is the fast
+domain (intra-slice ICI), crossing groups is slow (inter-slice DCI). The flat
+prepare-and-shoot schedule shifts by ±m/(p+1)^t regardless of group
+boundaries, so on a two-level network most of its messages pile onto the
+inter-group trunks. The schedules here keep each phase inside one level:
+
+* **hierarchical prepare-and-shoot** (universal, any matrix A):
+
+  1. *intra gather* — (p+1)-ary doubling all-gather inside each group
+     (⌈log_{p+1}K_intra⌉ rounds, fast links only);
+  2. *local contraction* — device (g, i) forms partial sums
+     ``z[l] = Σ_u x_{g, i-u} · A[(g, i-u), ((g+l)%G, i)]`` for every target
+     group offset l (no communication);
+  3. *inter shoot* — the paper's §IV digit-reduction over the group axis
+     (⌈log_{p+1}K_inter⌉ rounds, one slow message per port per round).
+
+  C1 = ⌈log I⌉ + ⌈log G⌉ (≤ ⌈log K⌉ + 1), C2 = Θ((I + G)/p) — the flat
+  √K·2/p when I ≈ G ≈ √K, but with every gather element on fast links.
+
+* **two-level DFT** (Cooley–Tukey): when A is the DFT matrix and
+  K_intra, K_inter are powers of p+1 dividing q−1, the multiplicative
+  structure β^{nk} = ω_I^{n1·k1} · β^{n2·k1} · ω_G^{n2·k2} splits the encode
+  into an intra butterfly, a local twiddle, and an inter butterfly —
+  C2 = log I + log G elements total, no intermediate inflation. Inputs and
+  outputs are relabeled ("up to permutation", exactly as draw-and-loose):
+  device (g, i) holds source coefficient G·rev_I(i) + rev_G(g) and finishes
+  with X[i + I·g]; :func:`two_level_dft_matrix` is the effective generator.
+
+* **ring schedule** (per the ring-networks line of work): on a ring the
+  optimal universal strategy is neighbor-only traffic — a bidirectional
+  store-and-forward all-gather (⌈(K−1)/2⌉ rounds of 1-element messages to
+  k±1) followed by a local combine. No multi-hop messages, so zero link
+  contention.
+
+Everything is validated on the cost-exact :class:`SyncSimulator`: the
+``simulate_*`` functions here run the schedules message-by-message under the
+p-port constraints and return bit-exact outputs plus measured C1/C2 and
+per-round message maps (which ``topo.lower`` cross-checks analytically).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.bounds import ceil_log
+from repro.core.field import Field
+from repro.core.matrices import digit_reversal_permutation
+from repro.core.schedule import (
+    butterfly_group_perms,
+    digit_reduction_message_size,
+    digit_reduction_slots,
+    plan_butterfly,
+)
+from repro.core.simulator import SimStats, SyncSimulator
+
+
+# ---------------------------------------------------------------------------
+# (p+1)-ary doubling all-gather rounds (shared by the intra phase and the
+# flat all-gather baseline lowering)
+# ---------------------------------------------------------------------------
+
+
+def gather_rounds(N: int, p: int) -> tuple[tuple[tuple[int, int], ...], ...]:
+    """Round schedule fully gathering N cyclic packets: each round every
+    processor sends a prefix of its (contiguous-offset) buffer to p partners.
+
+    Returns per round a tuple of ``(shift, count)`` ports: send buffer slots
+    [0, count) to processor k+shift (mod N). After round r the buffer holds
+    offsets [0, min((p+1)^r, N)) — ⌈log_{p+1}N⌉ rounds total, C2 = Σ max
+    count ≈ (N−1)/p (the optimal p-port all-gather of bounds.py).
+    """
+    rounds = []
+    b = 1
+    while b < N:
+        ports = []
+        for rho in range(1, p + 1):
+            cnt = min(b, N - rho * b)
+            if cnt > 0:
+                ports.append((rho * b, cnt))
+        rounds.append(tuple(ports))
+        b = min(b * (p + 1), N)
+    return tuple(rounds)
+
+
+# ---------------------------------------------------------------------------
+# hierarchical prepare-and-shoot plan
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HierarchicalPlan:
+    """Static schedule for the two-level universal encode (see module doc)."""
+
+    K: int
+    p: int
+    k_intra: int  # I — fast-domain size
+    k_inter: int  # G — slow-domain size
+    intra_rounds: tuple  # gather_rounds(k_intra, p)
+    inter_shifts: tuple[tuple[int, ...], ...]  # group-unit shifts per round
+    n_inter: int  # (p+1)^Ts slot count, Ts = ⌈log_{p+1} G⌉
+
+    @property
+    def c1(self) -> int:
+        return len(self.intra_rounds) + len(self.inter_shifts)
+
+    @property
+    def c2(self) -> int:
+        c = sum(max((cnt for _, cnt in ports), default=0) for ports in self.intra_rounds)
+        for t in range(1, len(self.inter_shifts) + 1):
+            c += max(
+                hier_shoot_message_size(self, t, rho) for rho in range(1, self.p + 1)
+            )
+        return c
+
+    @property
+    def algorithm(self) -> str:
+        return "hierarchical"
+
+
+def plan_hierarchical(K: int, p: int, k_intra: int) -> HierarchicalPlan:
+    if k_intra < 1 or K % k_intra:
+        raise ValueError(f"k_intra={k_intra} must divide K={K}")
+    G = K // k_intra
+    Ts = ceil_log(G, p + 1)
+    inter_shifts = tuple(
+        tuple(rho * (p + 1) ** (t - 1) for rho in range(1, p + 1))
+        for t in range(1, Ts + 1)
+    )
+    return HierarchicalPlan(
+        K=K,
+        p=p,
+        k_intra=k_intra,
+        k_inter=G,
+        intra_rounds=gather_rounds(k_intra, p),
+        inter_shifts=inter_shifts,
+        n_inter=(p + 1) ** Ts,
+    )
+
+
+def hier_shoot_slots(n: int, p: int, t: int, rho: int):
+    """(dst_slots, src_slots) for inter-shoot round ``t`` (1-based), port
+    ``rho`` over ``n`` slots — delegates to the §IV digit-reduction."""
+    return digit_reduction_slots(n, p, t, rho)
+
+
+def hier_shoot_message_size(plan: HierarchicalPlan, t: int, rho: int) -> int:
+    """Live elements shipped on port rho in inter round t: slots with
+    digit_t = rho, lower digits 0, below the live count G (slots l ≥ G are
+    identically zero — they are never worth sending)."""
+    return digit_reduction_message_size(
+        plan.n_inter, plan.k_inter, plan.p, t, rho
+    )
+
+
+def hierarchical_coeff_tensor(plan: HierarchicalPlan, A: np.ndarray) -> np.ndarray:
+    """coef[k, u, l] = A[g·I + (i−u)%I, ((g+l)%G)·I + i] masked to live
+    target-group offsets l < G; k = g·I + i. The local-contraction analogue
+    of ``schedule.shoot_coeff_tensor`` (built host-side, baked into jit)."""
+    K, I, G, n = plan.K, plan.k_intra, plan.k_inter, plan.n_inter
+    k = np.arange(K)
+    g, i = k // I, k % I
+    u = np.arange(I)
+    l = np.arange(n)
+    rows = g[:, None] * I + (i[:, None] - u[None, :]) % I  # (K, I)
+    cols = ((g[:, None] + l[None, :]) % G) * I + i[:, None]  # (K, n)
+    coef = np.asarray(A)[rows[:, :, None], cols[:, None, :]]  # (K, I, n)
+    return coef * (l < G)[None, None, :]
+
+
+def simulate_hierarchical(
+    x: np.ndarray, A: np.ndarray, plan: HierarchicalPlan, field: Field
+) -> tuple[np.ndarray, SimStats]:
+    """Message-passing execution under the p-port constraints; bit-exact
+    ``x @ A`` for ANY matrix A. Returns (x̃, stats)."""
+    K, p, I, G = plan.K, plan.p, plan.k_intra, plan.k_inter
+    sim = SyncSimulator(K, p)
+    x = field.asarray(x)
+    A = field.asarray(A)
+
+    # ---- intra gather: storage[k][u] = x_{g, (i-u) % I} -------------------
+    storage: list[list] = [[x[k]] for k in range(K)]
+    for ports in plan.intra_rounds:
+        msgs = {}
+        for k in range(K):
+            g, i = divmod(k, I)
+            for s, cnt in ports:
+                dst = g * I + (i + s) % I
+                msgs[(k, dst)] = storage[k][:cnt]
+        delivered = sim.exchange(msgs)
+        new = [list(st) for st in storage]
+        for k in range(K):
+            g, i = divmod(k, I)
+            for s, cnt in ports:  # append in port order → contiguous offsets
+                src = g * I + (i - s) % I
+                new[k].extend(delivered[(src, k)])
+        storage = new
+    for k in range(K):
+        assert len(storage[k]) == I, "intra gather must cover the group"
+
+    # ---- local contraction: z[l] = partial sum for group (g+l) % G --------
+    w = np.zeros((K, plan.n_inter), dtype=np.uint64)
+    for k in range(K):
+        g, i = divmod(k, I)
+        for l in range(G):
+            col = ((g + l) % G) * I + i
+            acc = np.uint64(0)
+            for u in range(I):
+                r = g * I + (i - u) % I
+                acc = field.add(acc, field.mul(storage[k][u], A[r, col]))
+            w[k, l] = acc
+
+    # ---- inter shoot: digit-reduce the group offset toward slot 0 ---------
+    radix = p + 1
+    for t, shifts in enumerate(plan.inter_shifts, start=1):
+        stride = radix ** (t - 1)
+        msgs = {}
+        for k in range(K):
+            g, i = divmod(k, I)
+            for rho, s in enumerate(shifts, start=1):
+                ls = [
+                    l
+                    for l in range(plan.n_inter)
+                    if (l // stride) % radix == rho and l % stride == 0 and l < G
+                ]
+                if ls:
+                    dst = ((g + s) % G) * I + i
+                    msgs[(k, dst)] = [(l, w[k, l]) for l in ls]
+        delivered = sim.exchange(msgs)
+        for (src, dst), items in delivered.items():
+            for l, val in items:
+                w[dst, l - ((l // stride) % radix) * stride] = field.add(
+                    w[dst, l - ((l // stride) % radix) * stride], val
+                )
+
+    out = np.array([w[k, 0] for k in range(K)], dtype=np.uint64)
+    return out, sim.stats
+
+
+# ---------------------------------------------------------------------------
+# ring-optimized universal schedule
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RingPlan:
+    """Neighbor-only all-gather + local combine: the bandwidth-optimal
+    universal schedule on a ring (1 hop per message, zero contention)."""
+
+    K: int
+    p: int  # p ≥ 2 → bidirectional (⌈(K−1)/2⌉ rounds); p = 1 → K−1 rounds
+
+    @property
+    def c1(self) -> int:
+        if self.K <= 1:
+            return 0
+        return self.K - 1 if self.p == 1 else -(-(self.K - 1) // 2)
+
+    @property
+    def c2(self) -> int:
+        return self.c1  # one element per port per round
+
+    @property
+    def algorithm(self) -> str:
+        return "ring"
+
+
+def plan_ring(K: int, p: int) -> RingPlan:
+    return RingPlan(K=K, p=p)
+
+
+def ring_rounds(plan: RingPlan) -> list[dict]:
+    """Per-round message maps {(src, dst): elements} of the ring schedule
+    (the lowering format of topo.lower / SimStats.round_messages)."""
+    K = plan.K
+    rounds: list[dict] = []
+    if K <= 1:
+        return rounds
+    if plan.p == 1:
+        for _ in range(K - 1):
+            rounds.append({(k, (k + 1) % K): 1 for k in range(K)})
+        return rounds
+    r = -(-(K - 1) // 2)
+    for j in range(1, r + 1):
+        msgs = {(k, (k + 1) % K): 1 for k in range(K)}
+        if not (j == r and (K - 1) % 2 == 1):  # odd remainder: fwd only
+            msgs.update({(k, (k - 1) % K): 1 for k in range(K)})
+        rounds.append(msgs)
+    return rounds
+
+
+def simulate_ring_encode(
+    x: np.ndarray, A: np.ndarray, plan: RingPlan, field: Field
+) -> tuple[np.ndarray, SimStats]:
+    """Store-and-forward execution of the ring schedule; exact for any A."""
+    K = plan.K
+    sim = SyncSimulator(K, plan.p)
+    x = field.asarray(x)
+    A = field.asarray(A)
+    have = {k: {k: x[k]} for k in range(K)}
+    for j, msgs in enumerate(ring_rounds(plan), start=1):
+        payloads = {}
+        for (src, dst) in msgs:
+            # forward stream carries x_{src-(j-1)}, backward x_{src+(j-1)}
+            r = (src - (j - 1)) % K if dst == (src + 1) % K else (src + (j - 1)) % K
+            payloads[(src, dst)] = [(r, have[src][r])]
+        delivered = sim.exchange(payloads)
+        for (src, dst), items in delivered.items():
+            for r, val in items:
+                have[dst][r] = val
+    out = np.zeros(K, dtype=np.uint64)
+    for k in range(K):
+        assert len(have[k]) == K, "ring gather must cover all packets"
+        acc = np.uint64(0)
+        for r in range(K):
+            acc = field.add(acc, field.mul(have[k][r], A[r, k]))
+        out[k] = acc
+    return out, sim.stats
+
+
+# ---------------------------------------------------------------------------
+# two-level Cooley–Tukey DFT
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TwoLevelDFTPlan:
+    """β^{nk} factorization for K = I·G (see module doc): intra butterfly →
+    local twiddle → inter butterfly. Relabelings: device (g, i) holds source
+    coefficient ``input_coeff[k]`` and finishes with X[``output_index[k]``]."""
+
+    K: int
+    p: int
+    k_intra: int
+    k_inter: int
+    q: int
+    input_coeff: np.ndarray  # (K,) n = G·rev_I(i) + rev_G(g)
+    output_index: np.ndarray  # (K,) i + I·g
+    twiddle: np.ndarray  # (K,) β^{rev_G(g)·i} applied between the stages
+
+    @property
+    def c1(self) -> int:
+        return ceil_log(self.k_intra, self.p + 1) + ceil_log(self.k_inter, self.p + 1)
+
+    @property
+    def c2(self) -> int:
+        return self.c1  # both stages are butterflies: 1 element per round
+
+    @property
+    def algorithm(self) -> str:
+        return "hierarchical-dft"
+
+
+def plan_two_level_dft(K: int, p: int, q: int, k_intra: int) -> TwoLevelDFTPlan:
+    """Requires K | q−1 and k_intra, K/k_intra powers of p+1 (each stage is a
+    radix-(p+1) butterfly)."""
+    if K % k_intra:
+        raise ValueError(f"k_intra={k_intra} must divide K={K}")
+    I, G = k_intra, K // k_intra
+    radix = p + 1
+    for sz in (I, G):
+        if radix ** ceil_log(sz, radix) != sz:
+            raise ValueError(f"stage size {sz} is not a power of {radix}")
+    if (q - 1) % K:
+        raise ValueError(f"K={K} must divide q-1={q - 1}")
+    f = Field(q)
+    beta = f.root_of_unity(K)
+    rev_i = digit_reversal_permutation(I, radix) if I > 1 else np.zeros(1, np.int64)
+    rev_g = digit_reversal_permutation(G, radix) if G > 1 else np.zeros(1, np.int64)
+    k = np.arange(K)
+    g, i = k // I, k % I
+    input_coeff = G * rev_i[i] + rev_g[g]
+    output_index = i + I * g
+    twiddle = f.pow(np.full(K, beta, dtype=np.uint64), rev_g[g] * i)
+    return TwoLevelDFTPlan(
+        K=K,
+        p=p,
+        k_intra=I,
+        k_inter=G,
+        q=q,
+        input_coeff=input_coeff,
+        output_index=output_index,
+        twiddle=twiddle,
+    )
+
+
+def two_level_dft_matrix(plan: TwoLevelDFTPlan) -> np.ndarray:
+    """The effective generator: M[k, k'] = D_K[input_coeff[k],
+    output_index[k']] — a row/col permutation of the DFT matrix (still MDS),
+    so ``simulate_two_level_dft(x) == x @ M`` bit-exactly."""
+    from repro.core.matrices import dft_matrix
+
+    D = dft_matrix(Field(plan.q), plan.K)
+    return D[plan.input_coeff][:, plan.output_index]
+
+
+def simulate_two_level_dft(
+    x: np.ndarray, plan: TwoLevelDFTPlan, field: Field
+) -> tuple[np.ndarray, SimStats]:
+    """Both butterfly stages message-by-message on one simulator: every
+    group's (resp. stride-column's) butterfly shares rounds, so C1 = C2 =
+    log I + log G is measured globally under the p-port constraints."""
+    K, p, I, G = plan.K, plan.p, plan.k_intra, plan.k_inter
+    radix = p + 1
+    sim = SyncSimulator(K, p)
+    v = field.asarray(x).copy()
+
+    def run_stage(bf_plan, n_local, to_global):
+        """One butterfly over every parallel subgroup at once; ``to_global``
+        maps (subgroup, local index) → processor id."""
+        nonlocal v
+        n_sub = K // n_local
+        for t in range(bf_plan.H):
+            perms = butterfly_group_perms(n_local, radix, t)
+            msgs = {}
+            for sub in range(n_sub):
+                for lk in range(n_local):
+                    src = to_global(sub, lk)
+                    for dst_map in perms:
+                        msgs[(src, to_global(sub, int(dst_map[lk])))] = [v[src]]
+            delivered = sim.exchange(msgs)
+            step = radix**t
+            tw = bf_plan.twiddles[t]
+            new_v = v.copy()
+            for sub in range(n_sub):
+                received = {}
+                for lk in range(n_local):
+                    received.setdefault(lk, {})[(lk // step) % radix] = v[
+                        to_global(sub, lk)
+                    ]
+                for lk in range(n_local):
+                    gk = to_global(sub, lk)
+                    for dst_map in perms:
+                        received[int(dst_map[lk])][(lk // step) % radix] = v[gk]
+                for lk in range(n_local):
+                    acc = np.uint64(0)
+                    for rho in range(radix):
+                        acc = field.add(
+                            acc,
+                            field.mul(np.uint64(tw[lk, rho]), received[lk][rho]),
+                        )
+                    new_v[to_global(sub, lk)] = acc
+            v = new_v
+
+    if I > 1:
+        run_stage(plan_butterfly(I, p, plan.q), I, lambda sub, lk: sub * I + lk)
+    v = field.mul(v, plan.twiddle)
+    if G > 1:
+        run_stage(plan_butterfly(G, p, plan.q), G, lambda sub, lk: lk * I + sub)
+    return v, sim.stats

@@ -1,0 +1,268 @@
+"""Declarative network topologies + α-β time estimation for round schedules.
+
+The paper's cost model (§I) charges every round β and every element τ on a
+flat synchronous p-port network where any processor can reach any other in
+one hop. Real meshes are not flat: a TPU slice is a torus of fast ICI links,
+a multi-slice job adds a slow DCI level on top (MaxText-style multi-pod), and
+a ring only has neighbor links. This module describes those networks
+declaratively and prices an arbitrary round schedule on them:
+
+* a :class:`Topology` knows its directed links, the deterministic route
+  (link sequence) between any two processors, and each link's α/β cost;
+* :func:`schedule_time` maps a round schedule — ``list`` of rounds, each a
+  ``{(src, dst): elements}`` message map, exactly the shape the cost-exact
+  simulator records in ``SimStats.round_messages`` and ``topo.lower``
+  produces analytically — onto the topology: every message occupies every
+  link of its route, per-link time is serialized (#msgs·α + load·β), and a
+  round lasts as long as its busiest link.
+
+On :class:`FullyConnected` this collapses to the paper's model exactly:
+``total = C1·α + C2·β·payload`` (each message has a private link).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class LinkCost:
+    """Per-link α-β parameters: ``alpha`` seconds of per-message startup,
+    ``beta`` seconds per field element crossing the link."""
+
+    alpha: float
+    beta: float
+
+
+# Defaults mirror core.bounds.CostModel: v5e ICI ≈ 1 µs startup, one uint32
+# element over 50 GB/s; DCI (inter-slice) ≈ 10 µs startup, 5 GB/s.
+ICI = LinkCost(alpha=1e-6, beta=4.0 / 50e9)
+DCI = LinkCost(alpha=10e-6, beta=4.0 / 5e9)
+
+
+class Topology:
+    """Base class: ``n`` processors, deterministic shortest-path routing.
+
+    Subclasses define :meth:`route` (the ordered directed-link sequence a
+    ``src → dst`` message traverses; each link is a hashable id) and
+    :meth:`link_cost`.
+    """
+
+    n: int
+    name: str = "topology"
+
+    def route(self, src: int, dst: int) -> tuple:
+        raise NotImplementedError
+
+    def link_cost(self, link) -> LinkCost:
+        raise NotImplementedError
+
+    def hops(self, src: int, dst: int) -> int:
+        return len(self.route(src, dst))
+
+
+def _ring_route(n: int, src: int, dst: int, tag):
+    """Shorter-direction route on an n-ring; ties go forward. Links are
+    ``(tag, u, v)`` with v = u±1 (mod n)."""
+    fwd = (dst - src) % n
+    links = []
+    if fwd <= n - fwd:
+        for h in range(fwd):
+            u = (src + h) % n
+            links.append((tag, u, (u + 1) % n))
+    else:
+        for h in range(n - fwd):
+            u = (src - h) % n
+            links.append((tag, u, (u - 1) % n))
+    return tuple(links)
+
+
+@dataclass(frozen=True)
+class FullyConnected(Topology):
+    """Today's implicit model: a private link per ordered pair — any uniform
+    shift is one hop and messages never contend."""
+
+    n: int
+    cost: LinkCost = ICI
+    name: str = "flat"
+
+    def route(self, src, dst):
+        if src == dst:
+            return ()
+        return (("flat", src, dst),)
+
+    def link_cost(self, link):
+        return self.cost
+
+
+@dataclass(frozen=True)
+class Ring(Topology):
+    """Bidirectional ring: processor k links only to k±1. A shift-s message
+    travels min(s, n−s) hops and contends with everything else crossing the
+    same neighbor links."""
+
+    n: int
+    cost: LinkCost = ICI
+    name: str = "ring"
+
+    def route(self, src, dst):
+        if src == dst:
+            return ()
+        return _ring_route(self.n, src, dst, "ring")
+
+    def link_cost(self, link):
+        return self.cost
+
+
+@dataclass(frozen=True)
+class Torus2D(Topology):
+    """rows × cols torus with dimension-ordered (row-ring then col-ring)
+    routing; processor k = r·cols + c."""
+
+    rows: int
+    cols: int
+    cost: LinkCost = ICI
+    name: str = "torus"
+
+    @property
+    def n(self):  # type: ignore[override]
+        return self.rows * self.cols
+
+    def route(self, src, dst):
+        if src == dst:
+            return ()
+        sr, sc = divmod(src, self.cols)
+        dr, dc = divmod(dst, self.cols)
+        links = []
+        # move along the row ring (vary column) at row sr, then the column ring
+        for tag, u, v in _ring_route(self.cols, sc, dc, "x"):
+            links.append(("x", sr, u, v))
+        for tag, u, v in _ring_route(self.rows, sr, dr, "y"):
+            links.append(("y", dc, u, v))
+        return tuple(links)
+
+    def link_cost(self, link):
+        return self.cost
+
+
+@dataclass(frozen=True)
+class TwoLevel(Topology):
+    """K = K_inter × K_intra two-level hierarchy (multi-slice model):
+    processor k = g·K_intra + i sits in group g. Within a group every ordered
+    pair has a private fast link (ICI); between groups g ≠ g' ALL traffic
+    shares one slow trunk per ordered group pair (DCI) — the contention the
+    hierarchical schedule is designed to avoid."""
+
+    k_intra: int
+    k_inter: int
+    intra: LinkCost = ICI
+    inter: LinkCost = DCI
+    name: str = "two-level"
+
+    @property
+    def n(self):  # type: ignore[override]
+        return self.k_intra * self.k_inter
+
+    def group(self, k: int) -> int:
+        return k // self.k_intra
+
+    def route(self, src, dst):
+        if src == dst:
+            return ()
+        gs, gd = self.group(src), self.group(dst)
+        if gs == gd:
+            return (("intra", src, dst),)
+        return (("inter", gs, gd),)
+
+    def link_cost(self, link):
+        return self.intra if link[0] == "intra" else self.inter
+
+
+# ---------------------------------------------------------------------------
+# α-β estimator
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TimeEstimate:
+    total: float  # seconds
+    per_round: tuple[float, ...]
+    max_contention: int  # max #messages sharing one link in any round
+    max_link_elems: int  # max elements crossing one link in any round
+
+    @property
+    def rounds(self) -> int:
+        return len(self.per_round)
+
+
+def round_link_loads(topo: Topology, messages: dict) -> dict:
+    """{link: (n_messages, elements)} for one round's message map."""
+    loads: dict = {}
+    for (src, dst), elems in messages.items():
+        for link in topo.route(src, dst):
+            cnt, tot = loads.get(link, (0, 0))
+            loads[link] = (cnt + 1, tot + elems)
+    return loads
+
+
+def schedule_time(
+    topo: Topology, rounds: list, payload_elems: int = 1
+) -> TimeEstimate:
+    """Price a round schedule on ``topo``. Each round: every link serializes
+    its traffic (#msgs·α + elements·payload·β) and the round lasts as long as
+    its busiest link; rounds are synchronous so totals add."""
+    per_round = []
+    max_cont = 0
+    max_load = 0
+    for messages in rounds:
+        loads = round_link_loads(topo, messages)
+        t = 0.0
+        for link, (cnt, elems) in loads.items():
+            c = topo.link_cost(link)
+            t = max(t, cnt * c.alpha + elems * payload_elems * c.beta)
+            max_cont = max(max_cont, cnt)
+            max_load = max(max_load, elems)
+        per_round.append(t)
+    return TimeEstimate(
+        total=sum(per_round),
+        per_round=tuple(per_round),
+        max_contention=max_cont,
+        max_link_elems=max_load,
+    )
+
+
+def make_topology(
+    name: str,
+    K: int,
+    *,
+    k_intra: int | None = None,
+    intra: LinkCost = ICI,
+    inter: LinkCost = DCI,
+) -> Topology:
+    """Factory for the CLI / autotuner: name ∈ {flat, ring, torus, two-level}."""
+    if name == "flat":
+        return FullyConnected(K, cost=intra)
+    if name == "ring":
+        return Ring(K, cost=intra)
+    if name == "torus":
+        rows = k_intra or _near_square(K)
+        if K % rows:
+            raise ValueError(f"torus needs rows | K, got rows={rows}, K={K}")
+        return Torus2D(rows, K // rows, cost=intra)
+    if name == "two-level":
+        ki = k_intra or _near_square(K)
+        if K % ki:
+            raise ValueError(f"two-level needs k_intra | K, got {ki}, K={K}")
+        return TwoLevel(k_intra=ki, k_inter=K // ki, intra=intra, inter=inter)
+    raise ValueError(f"unknown topology {name!r}")
+
+
+def _near_square(K: int) -> int:
+    """Largest divisor of K not exceeding √K."""
+    best = 1
+    d = 1
+    while d * d <= K:
+        if K % d == 0:
+            best = d
+        d += 1
+    return best

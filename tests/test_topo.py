@@ -1,0 +1,300 @@
+"""repro.topo host-side tests: topology routing, α-β pricing, lowering vs.
+the cost-exact simulator (message-for-message), hierarchical/ring/two-level
+DFT exactness, and the autotuner's topology-dependent choices.
+
+Acceptance anchor: for every lowered schedule the predicted round count (C1)
+equals the simulator's measured C1 — checked on flat, ring, and two-level
+topologies (the round count is topology-independent; the topologies change
+the *time*, which is also sanity-checked here).
+"""
+
+import numpy as np
+import pytest
+
+from hyputil import HAVE_HYPOTHESIS, given, settings, st
+from repro.core.field import M31, NTT, Field
+from repro.core.matrices import dft_matrix, random_matrix, random_vector
+from repro.core.prepare_shoot import encode_oracle
+from repro.core.schedule import plan_butterfly, plan_draw_loose, plan_prepare_shoot
+from repro.core.simulator import (
+    simulate_butterfly,
+    simulate_draw_loose,
+    simulate_prepare_shoot,
+)
+from repro.topo import (
+    DCI,
+    ICI,
+    FullyConnected,
+    LinkCost,
+    Ring,
+    Torus2D,
+    TwoLevel,
+    autotune,
+    lower,
+    lower_allgather,
+    make_topology,
+    plan_hierarchical,
+    plan_ring,
+    plan_two_level_dft,
+    schedule_time,
+    simulate_hierarchical,
+    simulate_ring_encode,
+    simulate_two_level_dft,
+    two_level_dft_matrix,
+)
+
+F = Field(M31)
+
+
+# ---------------------------------------------------------------------------
+# topology model
+# ---------------------------------------------------------------------------
+
+
+def test_flat_routing_single_hop():
+    t = FullyConnected(8)
+    assert t.hops(0, 5) == 1 and t.hops(3, 3) == 0
+
+
+def test_ring_routing_shorter_direction():
+    t = Ring(8)
+    assert t.hops(0, 1) == 1
+    assert t.hops(0, 4) == 4
+    assert t.hops(0, 5) == 3  # backwards is shorter
+    assert t.route(0, 7) == (("ring", 0, 7),)
+
+
+def test_torus_routing_dimension_ordered():
+    t = Torus2D(4, 4)
+    # (0,0) → (1,2): 2 x-hops then 1 y-hop
+    assert t.hops(0, 6) == 3
+    links = t.route(0, 6)
+    assert [l[0] for l in links] == ["x", "x", "y"]
+    # wraparound both dims
+    assert t.hops(0, 15) == 2  # (0,0)→(3,3) is 1 back in each ring
+
+
+def test_two_level_routing_and_costs():
+    t = TwoLevel(k_intra=4, k_inter=2)
+    assert t.route(0, 3) == (("intra", 0, 3),)
+    assert t.route(1, 6) == (("inter", 0, 1),)
+    assert t.link_cost(("intra", 0, 3)) == ICI
+    assert t.link_cost(("inter", 0, 1)) == DCI
+
+
+def test_schedule_time_collapses_to_paper_model_on_flat():
+    """On FullyConnected the α-β estimate is exactly C1·α + Σ d_t·β."""
+    plan = plan_prepare_shoot(16, 1)
+    low = lower(plan)
+    topo = FullyConnected(16, cost=LinkCost(alpha=1e-6, beta=1e-9))
+    est = low.time(topo, payload_elems=7)
+    expect = low.c1 * 1e-6 + low.c2 * 7 * 1e-9
+    assert est.total == pytest.approx(expect, rel=1e-12)
+    assert est.max_contention == 1  # private link per pair: no contention
+
+
+def test_hierarchical_gather_stays_on_fast_links():
+    """The flat schedule's bulky gather phase leaks onto the slow inter-group
+    trunks (its shifts ignore group boundaries); the hierarchical schedule's
+    gather rounds touch intra links only — and the α-β clock rewards it."""
+    topo = TwoLevel(k_intra=4, k_inter=4)
+    ps = plan_prepare_shoot(16, 1)
+    hp = plan_hierarchical(16, 1, k_intra=4)
+    flat, hier = lower(ps), lower(hp)
+    for loads in hier.link_loads(topo)[: len(hp.intra_rounds)]:
+        assert all(link[0] == "intra" for link in loads)
+    assert any(
+        link[0] == "inter"
+        for loads in flat.link_loads(topo)[: ps.Tp]
+        for link in loads
+    )
+    assert hier.time(topo, 1024).total < flat.time(topo, 1024).total
+
+
+# ---------------------------------------------------------------------------
+# lowering ≡ simulation (satellite: per-round per-link utilization)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("K,p", [(8, 1), (8, 2), (16, 1), (27, 2), (65, 2), (5, 1), (2, 2)])
+def test_lower_prepare_shoot_matches_simulator_messages(K, p):
+    plan = plan_prepare_shoot(K, p)
+    x = random_vector(F, K, seed=K)
+    _, st = simulate_prepare_shoot(x, random_matrix(F, K, seed=K), plan, F)
+    low = lower(plan)
+    assert list(low.rounds) == st.round_messages
+    assert low.c1 == st.C1 and low.c2 == st.C2
+
+
+@pytest.mark.parametrize("K,p,q", [(8, 1, NTT), (9, 2, M31), (16, 1, NTT)])
+def test_lower_butterfly_matches_simulator_messages(K, p, q):
+    f = Field(q)
+    plan = plan_butterfly(K, p, q)
+    _, st = simulate_butterfly(random_vector(f, K, seed=1), plan, f)
+    low = lower(plan)
+    assert list(low.rounds) == st.round_messages
+    assert low.c1 == st.C1 and low.c2 == st.C2
+
+
+@pytest.mark.parametrize("K,p,q", [(8, 1, NTT), (12, 1, M31)])
+def test_lower_draw_loose_c1_c2_match_simulator(K, p, q):
+    """Draw-loose sub-phases are simulated per-subgroup (local indices), so
+    cross-check the aggregate C1/C2 — the merged lowering must agree."""
+    f = Field(q)
+    plan = plan_draw_loose(K, p, q)
+    _, st = simulate_draw_loose(random_vector(f, K, seed=2), plan, f)
+    low = lower(plan)
+    assert low.c1 == st.C1 and low.c2 == st.C2
+
+
+def test_link_utilization_cross_check_on_ring():
+    """Satellite check: per-round per-link loads derived from the simulator's
+    round_messages equal the analytical lowering's loads, link for link."""
+    from repro.topo.model import round_link_loads
+
+    K, p = 16, 1
+    plan = plan_prepare_shoot(K, p)
+    x = random_vector(F, K, seed=0)
+    _, st = simulate_prepare_shoot(x, random_matrix(F, K, seed=0), plan, F)
+    topo = Ring(K)
+    low = lower(plan)
+    analytical = low.link_loads(topo)
+    from_sim = [round_link_loads(topo, msgs) for msgs in st.round_messages]
+    assert analytical == from_sim
+
+
+# ---------------------------------------------------------------------------
+# hierarchical / ring / two-level DFT exactness
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "K,k_intra,p", [(8, 2, 1), (8, 4, 1), (12, 3, 1), (12, 4, 2), (16, 4, 1), (15, 3, 2)]
+)
+def test_hierarchical_simulator_exact_and_counted(K, k_intra, p):
+    A = random_matrix(F, K, seed=K + k_intra)
+    x = random_vector(F, K, seed=k_intra)
+    plan = plan_hierarchical(K, p, k_intra)
+    out, st = simulate_hierarchical(x, A, plan, F)
+    np.testing.assert_array_equal(out, encode_oracle(x, A))
+    assert st.C1 == plan.c1 and st.C2 == plan.c2
+    low = lower(plan)
+    assert list(low.rounds) == st.round_messages
+
+
+@pytest.mark.parametrize("K,p", [(8, 2), (9, 2), (8, 1), (5, 3)])
+def test_ring_schedule_exact(K, p):
+    A = random_matrix(F, K, seed=K)
+    x = random_vector(F, K, seed=1)
+    plan = plan_ring(K, p)
+    out, st = simulate_ring_encode(x, A, plan, F)
+    np.testing.assert_array_equal(out, encode_oracle(x, A))
+    assert st.C1 == plan.c1 and st.C2 == plan.c2
+    assert list(lower(plan).rounds) == st.round_messages
+
+
+@pytest.mark.parametrize(
+    "K,k_intra,p,q", [(8, 2, 1, NTT), (8, 4, 1, NTT), (16, 4, 1, NTT), (9, 3, 2, M31)]
+)
+def test_two_level_dft_exact_and_permutation_of_dft(K, k_intra, p, q):
+    f = Field(q)
+    plan = plan_two_level_dft(K, p, q, k_intra)
+    x = random_vector(f, K, seed=5)
+    out, st = simulate_two_level_dft(x, plan, f)
+    M = two_level_dft_matrix(plan)
+    np.testing.assert_array_equal(out, encode_oracle(x, M, q))
+    assert st.C1 == plan.c1 == st.C2 == plan.c2
+    # M is a row/col relabeling of the true DFT matrix (still MDS)
+    D = dft_matrix(f, K)
+    assert sorted(map(tuple, M.tolist())) == sorted(map(tuple, D.tolist()))
+    assert list(lower(plan).rounds) == st.round_messages
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from([(K, d, p) for K in (8, 12, 16, 18, 20, 24) for d in range(2, K)
+                        if K % d == 0 for p in (1, 2)]))
+def test_hierarchical_every_factorization_matches_oracle(params):
+    """Property (hyputil-guarded): EVERY K = K_intra × K_inter factorization
+    is bit-exact against the matrix oracle."""
+    K, k_intra, p = params
+    A = random_matrix(F, K, seed=K * 31 + k_intra)
+    x = random_vector(F, K, seed=p)
+    plan = plan_hierarchical(K, p, k_intra)
+    out, _ = simulate_hierarchical(x, A, plan, F)
+    np.testing.assert_array_equal(out, encode_oracle(x, A))
+
+
+# ---------------------------------------------------------------------------
+# autotuner
+# ---------------------------------------------------------------------------
+
+TOPOS = {
+    "flat": FullyConnected(16),
+    "ring": Ring(16),
+    "two-level": TwoLevel(k_intra=4, k_inter=4),
+}
+
+
+@pytest.mark.parametrize("topo_name", list(TOPOS))
+def test_autotuner_c1_matches_simulator_on_every_topology(topo_name):
+    """Acceptance: each candidate's predicted round count equals the
+    simulator's measured C1, on flat, ring, and two-level topologies."""
+    topo = TOPOS[topo_name]
+    K, p, q = 16, 1, NTT
+    f = Field(q)
+    result = autotune(K, p, 4096, topo, q=q, generator="dft")
+    A = random_matrix(f, K, seed=7)
+    x = random_vector(f, K, seed=8)
+    for cand in result.candidates:
+        if cand.algorithm == "prepare-shoot":
+            _, st = simulate_prepare_shoot(x, A, cand.plan, f)
+        elif cand.algorithm == "butterfly":
+            _, st = simulate_butterfly(x, cand.plan, f)
+        elif cand.algorithm == "draw-loose":
+            _, st = simulate_draw_loose(x, cand.plan, f)
+        elif cand.algorithm == "hierarchical":
+            _, st = simulate_hierarchical(x, A, cand.plan, f)
+        elif cand.algorithm == "hierarchical-dft":
+            _, st = simulate_two_level_dft(x, cand.plan, f)
+        elif cand.algorithm == "ring":
+            _, st = simulate_ring_encode(x, A, cand.plan, f)
+        elif cand.algorithm == "allgather":
+            continue  # baseline foil has no message-passing simulator
+        else:  # pragma: no cover
+            raise AssertionError(cand.algorithm)
+        assert cand.c1 == st.C1, (topo_name, cand.algorithm)
+
+
+def test_autotuner_prefers_level_aligned_schedule_on_two_level():
+    topo = TwoLevel(k_intra=4, k_inter=4)
+    r = autotune(16, 1, 65536, topo, generator="general")
+    assert r.algorithm == "hierarchical"
+    flat = autotune(16, 1, 65536, FullyConnected(16), generator="general")
+    assert flat.algorithm == "prepare-shoot"
+
+
+def test_autotuner_prefers_neighbor_schedule_on_ring():
+    r = autotune(16, 2, 1 << 20, Ring(16), generator="general")
+    assert r.algorithm == "ring"
+
+
+def test_autotuner_measured_override_hook():
+    topo = FullyConnected(16)
+    base = autotune(16, 1, 4096, topo, generator="general")
+    assert base.algorithm != "allgather"
+    forced = autotune(
+        16, 1, 4096, topo, generator="general",
+        measured={c.algorithm: 1.0 for c in base.candidates if c.algorithm != "allgather"},
+    )
+    assert forced.algorithm == "allgather"
+
+
+def test_make_topology_factory():
+    assert isinstance(make_topology("flat", 8), FullyConnected)
+    assert isinstance(make_topology("ring", 8), Ring)
+    t = make_topology("two-level", 8, k_intra=4)
+    assert t.k_intra == 4 and t.k_inter == 2
+    tor = make_topology("torus", 12, k_intra=3)
+    assert (tor.rows, tor.cols) == (3, 4)
+    with pytest.raises(ValueError):
+        make_topology("moebius", 8)

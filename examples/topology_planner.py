@@ -1,15 +1,29 @@
 """Topology planner: which encode algorithm should this scenario run?
 
 Given K, p, a payload size, and a topology, prints the autotuner's candidate
-table — per-algorithm C1/C2, α-β predicted time, worst per-link contention —
-and its choice.
+table — per-algorithm C1 (rounds), C2 (elements per port), α-β predicted
+time, worst per-link contention — and its choice (marked ``←``).
 
 Run:  PYTHONPATH=src python examples/topology_planner.py \
           --K 16 --p 1 --payload-bytes 65536 --topology two-level --intra 4
 
-Topologies: flat | ring | torus | two-level  (torus/two-level take --intra).
-Generators: general | vandermonde | dft  (structured kinds unlock the
-specific algorithms; dft needs K compatible with the field).
+      # recursive multi-level hierarchy (chip < slice < pod):
+      PYTHONPATH=src python examples/topology_planner.py \
+          --K 32 --topology hierarchy --levels 4,4,2
+
+Topologies: flat | ring | torus | two-level | hierarchy.
+``torus``/``two-level`` take ``--intra`` (fast-domain size);
+``hierarchy`` takes ``--levels`` — comma-separated per-level sizes,
+innermost (fastest links) first, multiplying to K (default: a balanced
+three-level factorization of K). Generators: general | vandermonde | dft
+(structured kinds unlock the specific algorithms; dft needs K compatible
+with the field).
+
+Reading the output: on a hierarchy the ``multilevel`` row is the recursive
+schedule whose phases align with the topology's levels (gather on the
+fastest links, one digit-reduction shoot per level); ``contention`` is the
+worst number of messages sharing one link in any round — the quantity the
+level-aligned schedules are designed to keep off the slow trunks.
 """
 
 from __future__ import annotations
@@ -21,14 +35,26 @@ from repro.topo import autotune, make_topology
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter
+    )
     ap.add_argument("--K", type=int, default=16, help="number of processors")
     ap.add_argument("--p", type=int, default=1, help="ports per processor")
     ap.add_argument("--payload-bytes", type=int, default=65536)
     ap.add_argument(
-        "--topology", default="two-level", choices=("flat", "ring", "torus", "two-level")
+        "--topology",
+        default="two-level",
+        choices=("flat", "ring", "torus", "two-level", "hierarchy"),
     )
-    ap.add_argument("--intra", type=int, default=None, help="fast-domain size")
+    ap.add_argument(
+        "--intra", type=int, default=None, help="fast-domain size (torus/two-level)"
+    )
+    ap.add_argument(
+        "--levels",
+        default=None,
+        help="hierarchy level sizes, innermost first, comma-separated "
+        "(e.g. 4,4,2 = 4 chips < 4 slices < 2 pods; Π levels must equal K)",
+    )
     ap.add_argument(
         "--generator", default="general", choices=("general", "vandermonde", "dft")
     )
@@ -36,14 +62,18 @@ def main() -> None:
     args = ap.parse_args()
 
     q = args.q or default_q_for(args.K, args.p)
-    topo = make_topology(args.topology, args.K, k_intra=args.intra)
+    levels = (
+        tuple(int(s) for s in args.levels.split(",")) if args.levels else None
+    )
+    topo = make_topology(args.topology, args.K, k_intra=args.intra, levels=levels)
     result = autotune(
         args.K, args.p, args.payload_bytes, topo, q=q, generator=args.generator
     )
 
+    extra = f" levels={getattr(topo, 'levels', None)}" if args.topology == "hierarchy" else ""
     print(
         f"K={args.K} p={args.p} payload={args.payload_bytes}B "
-        f"topology={topo.name} generator={args.generator} q={q}"
+        f"topology={topo.name}{extra} generator={args.generator} q={q}"
     )
     print(f"{'algorithm':<18}{'C1':>4}{'C2':>5}{'time':>12}{'contention':>12}")
     for c in result.candidates:

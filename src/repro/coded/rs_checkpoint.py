@@ -123,11 +123,33 @@ def encode_parity(x_limbs: jnp.ndarray, plan: ParityPlan) -> jnp.ndarray:
     return encode_universal(x_limbs, plan.A, p=plan.p, q=plan.q, plan=plan.ps_plan)
 
 
-def encode_parity_collective(mesh, axis: str, plan: ParityPlan):
+def encode_parity_collective(mesh, axis, plan: ParityPlan):
     """Mesh path: returns a jitted (K, S)→(K, S) function whose communication
-    is ppermute rounds on `axis` (the DP axis)."""
-    from repro.dist.collectives import ps_encode_jit
+    is ppermute rounds on the DP axis/axes.
 
+    ``axis`` may be a single mesh-axis name (flat prepare-and-shoot, the
+    default) or a tuple of axis names outermost → innermost — the
+    topology-aligned path ``launch.profiles.resolve_profile`` selects when
+    the DP replicas span a hierarchy (two axes → two-level
+    ``hierarchical_encode_jit``, more → recursive ``multilevel_encode_jit``);
+    every variant is bit-exact (same modular sums, reassociated)."""
+    from repro.dist.collectives import (
+        hierarchical_encode_jit,
+        multilevel_encode_jit,
+        ps_encode_jit,
+    )
+
+    if isinstance(axis, (tuple, list)):
+        axes = tuple(axis)
+        if len(axes) == 1:
+            fn, _ = ps_encode_jit(mesh, axes[0], plan.A, p=plan.p, q=plan.q)
+        elif len(axes) == 2:
+            fn, _ = hierarchical_encode_jit(
+                mesh, axes[0], axes[1], plan.A, p=plan.p, q=plan.q
+            )
+        else:
+            fn, _ = multilevel_encode_jit(mesh, axes, plan.A, p=plan.p, q=plan.q)
+        return fn
     fn, _ = ps_encode_jit(mesh, axis, plan.A, p=plan.p, q=plan.q)
     return fn
 

@@ -17,6 +17,7 @@ from .collectives import (  # noqa: F401
     allgather_encode_jit,
     butterfly_jit,
     hierarchical_encode_jit,
+    multilevel_encode_jit,
     ps_encode_jit,
 )
 from .pipeline import pipeline_apply, stack_stage_params  # noqa: F401

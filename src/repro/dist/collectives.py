@@ -18,6 +18,16 @@ kept for benchmarks and as the cost-model foil.
 All device arithmetic is the uint32-only tier of core/field.py (Shoup
 multiplies by compile-time coefficient duals), so the same bodies lower for
 CPU hosts and TPU.
+
+Paper-notation glossary: ``K`` processors (= product of the mesh encode
+axes), ``p`` ports per round (each ``ppermute`` is one port), ``C1`` rounds,
+``C2`` per-port elements; ``I``/``G`` the two-level k_intra × k_inter split
+of :func:`hierarchical_encode_jit`; *digit-reduction slots* — the §IV shoot
+buffer layout (one slot per (p+1)-ary numeral of the remaining target
+offset; round t zeroes digit t by shipping the slots with digit_t = ρ on
+port ρ). :func:`multilevel_encode_jit` generalizes to any K = Π K_level
+hierarchy: one gather over the innermost mesh axis, then one digit-reduction
+shoot per outer axis, innermost first.
 """
 
 from __future__ import annotations
@@ -45,9 +55,11 @@ __all__ = [
     "allgather_encode_jit",
     "butterfly_jit",
     "hierarchical_encode_jit",
+    "multilevel_encode_jit",
     "shoot_round_slots",
     "expected_permute_count",
     "expected_hier_permute_count",
+    "expected_multilevel_permute_count",
 ]
 
 
@@ -224,13 +236,13 @@ def hierarchical_encode_jit(
     slow domain. Bit-exact vs. the single-level ``ps_encode_jit`` /
     ``encode_oracle`` (modular sums reassociate exactly).
 
+    The two-level schedule is exactly the depth-2 case of the recursive one
+    (``plan_multilevel(K, p, (I, G))`` lowers to the same rounds — asserted
+    in tests), so the executor delegates to :func:`multilevel_encode_jit`.
+
     Returns ``(fn, plan)`` with plan a :class:`HierarchicalPlan`.
     """
-    from repro.topo.hierarchical import (
-        hier_shoot_slots,
-        hierarchical_coeff_tensor,
-        plan_hierarchical,
-    )
+    from repro.topo.hierarchical import plan_hierarchical
 
     G = int(mesh.shape[inter_axis])
     I = int(mesh.shape[intra_axis])
@@ -241,53 +253,122 @@ def hierarchical_encode_jit(
             f"A must be ({K}, {K}) to match mesh axes "
             f"({inter_axis!r}×{intra_axis!r}), got {A.shape}"
         )
-    plan = plan_hierarchical(K, p, k_intra=I)
-    n = plan.n_inter
-    coef = hierarchical_coeff_tensor(plan, A).astype(np.uint32)  # (K, I, n)
+    fn, _ = multilevel_encode_jit(mesh, (inter_axis, intra_axis), A, p=p, q=q)
+    return fn, plan_hierarchical(K, p, k_intra=I)
+
+
+# ---------------------------------------------------------------------------
+# recursive multi-level encode (repro.topo.hierarchical) on an N-D mesh
+# ---------------------------------------------------------------------------
+
+
+def expected_multilevel_permute_count(plan) -> int:
+    """ppermute budget of multilevel_encode_jit: one per non-empty intra
+    gather port plus one per (level, round, port) with live slots — the
+    plan/collective agreement contract (mirrors expected_hier_permute_count)."""
+    from repro.topo.hierarchical import multilevel_message_size
+
+    count = sum(len(ports) for ports in plan.intra_rounds)
+    for j in range(1, len(plan.levels)):
+        for t in range(1, len(plan.level_shifts[j - 1]) + 1):
+            for rho in range(1, plan.p + 1):
+                if multilevel_message_size(plan, j, t, rho):
+                    count += 1
+    return count
+
+
+def multilevel_encode_jit(mesh, axes, A: np.ndarray, *, p: int = 1, q: int = M31):
+    """Jitted N-level mesh executor of the universal encode: ``out = x @ A``
+    over GF(q) for ANY K×K matrix A, K = Π mesh.shape[ax] over ``axes``.
+
+    ``axes`` is ordered outermost (slowest links, e.g. ``"pod"``) →
+    innermost (fastest, e.g. ``"chip"``), matching how ``P(tuple(axes))``
+    shards the packet axis: the LAST mesh axis varies fastest, so device
+    (c_{L−1}, …, c_1, c_0) holds packet k = c_0 + K_0·(c_1 + K_1·(…)).
+
+    Phases (repro.topo.hierarchical — the recursive topology-aligned
+    schedule): (p+1)-ary doubling all-gather over the innermost axis, a
+    local Shoup contraction against baked per-device coefficients, then one
+    §IV digit-reduction shoot per outer axis, innermost first — every round
+    is ppermutes on exactly ONE mesh axis, so traffic never rides a slower
+    level than its phase. Bit-exact vs. ``ps_encode_jit`` / ``encode_oracle``
+    (modular sums reassociate exactly). With two axes this is exactly
+    ``hierarchical_encode_jit``'s schedule.
+
+    Returns ``(fn, plan)`` with plan a :class:`MultiLevelPlan`.
+    """
+    from repro.topo.hierarchical import (
+        multilevel_coeff_tensor,
+        multilevel_level_slots,
+        plan_multilevel,
+    )
+
+    axes = tuple(axes)
+    sizes = [int(mesh.shape[ax]) for ax in axes]
+    K = 1
+    for s in sizes:
+        K *= s
+    levels = tuple(reversed(sizes))  # innermost (last mesh axis) first
+    A = np.asarray(A)
+    if A.shape != (K, K):
+        raise ValueError(
+            f"A must be ({K}, {K}) to match mesh axes {axes!r}, got {A.shape}"
+        )
+    plan = plan_multilevel(K, p, levels)
+    K0, n = plan.levels[0], plan.n_slots
+    coef = multilevel_coeff_tensor(plan, A).astype(np.uint32)  # (K, K0, n)
     coef_shoup = shoup_precompute(coef, q)
-    axes2d = (inter_axis, intra_axis)
+    intra_axis = axes[-1]
+    # outer level j (1-based, innermost outer first) lives on mesh axis -1-j
+    level_axis = {j: axes[-1 - j] for j in range(1, len(levels))}
 
     def body(x, cf, cfs):
-        # x: (1, *payload) — packet of device (g, i); cf/cfs: (1, I, n)
+        # x: (1, *payload) — this device's packet; cf/cfs: (1, K0, n)
         npay = x.ndim - 1
-        # ---- intra gather: buf[:, u] = x_{g, (i-u) % I} -------------------
+        # ---- intra gather over the innermost axis -------------------------
         buf = x[:, None]
         for ports in plan.intra_rounds:
             parts = [buf]
             for s, cnt in ports:
                 parts.append(
-                    jax.lax.ppermute(buf[:, :cnt], intra_axis, _shift_perm(I, s))
+                    jax.lax.ppermute(buf[:, :cnt], intra_axis, _shift_perm(K0, s))
                 )
             buf = jnp.concatenate(parts, axis=1)
-        # ---- local contraction: z[l] = Σ_u buf[u]·A[(g,i-u), ((g+l)%G, i)] -
+        # ---- local contraction into the per-level offset slots ------------
         cols = []
         for l in range(n):
             acc = None
-            for u in range(I):
+            for u in range(K0):
                 term = shoup_mul(
                     buf[:, u], _bcast(cf[:, u, l], npay), _bcast(cfs[:, u, l], npay), q
                 )
                 acc = term if acc is None else madd(acc, term, q)
             cols.append(acc)
         z = jnp.stack(cols, axis=1)  # (1, n, *payload)
-        # ---- inter shoot: digit-reduce the group offset toward slot 0 -----
-        for t, shifts in enumerate(plan.inter_shifts, start=1):
-            acc = z
-            for rho, s in enumerate(shifts, start=1):
-                dst, src = hier_shoot_slots(n, p, t, rho)
-                if dst.size == 0 or not np.any(src < plan.k_inter):
-                    continue  # nothing live on this port
-                payload = jnp.take(z, jnp.asarray(src), axis=1)
-                payload = jax.lax.ppermute(payload, inter_axis, _shift_perm(G, s % G))
-                pos = np.full(n, dst.size, dtype=np.int64)
-                pos[dst] = np.arange(dst.size)
-                padded = jnp.concatenate([payload, jnp.zeros_like(z[:, :1])], axis=1)
-                acc = madd(acc, jnp.take(padded, jnp.asarray(pos), axis=1), q)
-            z = acc
+        # ---- per-level shoot, innermost outer level first -----------------
+        for j in range(1, len(plan.levels)):
+            kj = plan.levels[j]
+            for t, shifts in enumerate(plan.level_shifts[j - 1], start=1):
+                acc = z
+                for rho, s in enumerate(shifts, start=1):
+                    dst, src = multilevel_level_slots(plan, j, t, rho)
+                    if dst.size == 0:
+                        continue
+                    payload = jnp.take(z, jnp.asarray(src), axis=1)
+                    payload = jax.lax.ppermute(
+                        payload, level_axis[j], _shift_perm(kj, s % kj)
+                    )
+                    pos = np.full(n, dst.size, dtype=np.int64)
+                    pos[dst] = np.arange(dst.size)
+                    padded = jnp.concatenate(
+                        [payload, jnp.zeros_like(z[:, :1])], axis=1
+                    )
+                    acc = madd(acc, jnp.take(padded, jnp.asarray(pos), axis=1), q)
+                z = acc
         return z[:, 0]
 
     mapped = _smap(
-        body, mesh, in_specs=(P(axes2d), P(axes2d), P(axes2d)), out_specs=P(axes2d)
+        body, mesh, in_specs=(P(axes), P(axes), P(axes)), out_specs=P(axes)
     )
     cf_dev = jnp.asarray(coef)
     cfs_dev = jnp.asarray(coef_shoup)

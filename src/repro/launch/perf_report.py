@@ -35,11 +35,10 @@ def render(log_path: str = "results/perf_iterations.jsonl") -> str:
     return "\n".join(out)
 
 
-def render_topology(path: str = "results/BENCH_topology.json") -> str:
-    r = json.load(open(path))
+def _topology_table(r: dict, K, p, payload) -> list:
     out = [
-        f"Topology benchmark — K={r['K']}, p={r['p']}, payload "
-        f"{r['payload_elems']} elems, mesh {r['mesh']}, model {r['topology']}; "
+        f"Topology benchmark — K={K}, p={p}, payload "
+        f"{payload} elems, mesh {r['mesh']}, model {r['topology']}; "
         f"autotuner choice: **{r['autotuner_choice']}**",
         "",
         "| algorithm | C1 | C2 | predicted µs | measured µs |",
@@ -50,6 +49,17 @@ def render_topology(path: str = "results/BENCH_topology.json") -> str:
         out.append(
             f"| {alg} | {pred['c1']} | {pred['c2']} | {pred['us']:.1f} | "
             f"{f'{meas:.1f}' if meas is not None else '—'} |"
+        )
+    return out
+
+
+def render_topology(path: str = "results/BENCH_topology.json") -> str:
+    r = json.load(open(path))
+    out = _topology_table(r, r["K"], r["p"], r["payload_elems"])
+    if "three_level" in r:
+        out.append("")
+        out.extend(
+            _topology_table(r["three_level"], r["K"], r["p"], r["payload_elems"])
         )
     out.append("")
     out.append(

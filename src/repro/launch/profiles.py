@@ -21,6 +21,12 @@ an explicit hypothesis (EXPERIMENTS §Perf logs before/after per lever):
 * ``time_chunk``   — chunked+checkpointed time scans in RWKV/Mamba
                      (256-step chunks): backward saves only chunk-boundary
                      states instead of every step's state.
+
+Besides the sharding levers, :func:`resolve_profile` picks the
+coded-checkpoint DP-axis **encode algorithm** from the production mesh's
+network topology (``launch.mesh.production_topology`` → ``topo.autotune``):
+multi-pod derives a three-level chip < slice < pod hierarchy and selects the
+recursive multi-level schedule instead of the flat prepare-and-shoot.
 """
 
 from __future__ import annotations
@@ -91,3 +97,76 @@ def _params_fit_without_fsdp(cfg: ModelConfig) -> bool:
     from repro.launch.roofline import param_counts
 
     return param_counts(cfg)["total"] <= 8e9
+
+
+# ---------------------------------------------------------------------------
+# coded-checkpoint encode profile: algorithm from the mesh topology
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class EncodeProfile:
+    """Autotuned encode selection for the coded-checkpoint DP axis.
+
+    ``algorithm`` ∈ {prepare-shoot, hierarchical, multilevel, ring,
+    allgather}; ``plan`` is the matching compile-time schedule plan (None for
+    the plan-less allgather); ``levels`` the innermost-first hierarchy the
+    choice was priced on — also the level sizes ``multilevel_encode_jit``
+    expects its mesh axes (reversed) to have."""
+
+    topology: object  # repro.topo Topology the choice was priced on
+    algorithm: str
+    plan: object
+    tune: object  # full repro.topo.TuneResult (candidate table)
+
+    @property
+    def levels(self) -> tuple[int, ...]:
+        return getattr(self.topology, "levels", (self.topology.n,))
+
+
+def resolve_profile(
+    *,
+    multi_pod: bool = False,
+    mesh=None,
+    axes=None,
+    payload_bytes: int = 1 << 20,
+    p: int = 1,
+    q: int | None = None,
+    measured: dict[str, float] | None = None,
+) -> EncodeProfile:
+    """Pick the coded-checkpoint DP-axis encode algorithm from the mesh
+    topology via the autotuner (ROADMAP: "wire the autotuner into launch/").
+
+    Default: price on :func:`launch.mesh.production_topology` — multi-pod
+    derives the three-level chip < slice < pod hierarchy and selects the
+    recursive multi-level schedule. Pass ``mesh`` + ``axes`` (outermost →
+    innermost, e.g. ``("pod", "slice", "chip")``) to derive the hierarchy
+    from a live mesh instead. ``measured`` feeds wall-clock calibration
+    (e.g. ``results/BENCH_topology.json``'s ``measured_s``) through
+    ``autotune(..., measured=...)``.
+    """
+    from repro.core.field import M31
+    from repro.launch.mesh import production_topology, topology_for_mesh
+    from repro.topo import autotune
+
+    if mesh is not None:
+        if axes is None:
+            raise ValueError("pass axes=(outermost, ..., innermost) with mesh")
+        topo = topology_for_mesh(mesh, axes)
+    else:
+        topo = production_topology(multi_pod=multi_pod)
+    result = autotune(
+        topo.n,
+        p,
+        payload_bytes,
+        topo,
+        q=q if q is not None else M31,
+        generator="general",
+        measured=measured,
+    )
+    return EncodeProfile(
+        topology=topo,
+        algorithm=result.algorithm,
+        plan=result.chosen.plan,
+        tune=result,
+    )

@@ -1,28 +1,38 @@
 # Topology-aware layer over the flat p-port model (ROADMAP: "as fast as the
 # hardware allows" on real, hierarchical networks).
 #
-# - model.py         declarative topologies (flat, ring, torus, two-level) +
-#                    α-β time estimation of arbitrary round schedules
+# - model.py         declarative topologies (flat, ring, torus, two-level,
+#                    recursive hierarchy) + α-β time estimation of arbitrary
+#                    round schedules
 # - lower.py         plan → explicit per-round message maps, hop counts,
 #                    link contention (cross-checked vs. the exact simulator)
-# - hierarchical.py  two-level prepare-and-shoot, Cooley–Tukey two-level DFT,
+# - hierarchical.py  two-level prepare-and-shoot, recursive multi-level
+#                    encode (K = Π K_j), Cooley–Tukey two-level DFT,
 #                    ring-optimized schedule + their exact simulators
 # - autotune.py      per-(K, p, payload, topology) algorithm selection with
 #                    a measured-override calibration hook
 #
-# The mesh executor for the hierarchical schedule lives in
-# dist/collectives.hierarchical_encode_jit (dist lowers plans, as always).
+# The mesh executors for the hierarchical schedules live in
+# dist/collectives.hierarchical_encode_jit (2D) and
+# dist/collectives.multilevel_encode_jit (N-D) — dist lowers plans, as always.
 
 from .autotune import Candidate, TuneResult, autotune, candidates_for  # noqa: F401
 from .hierarchical import (  # noqa: F401
     HierarchicalPlan,
+    MultiLevelPlan,
     RingPlan,
     TwoLevelDFTPlan,
     hierarchical_coeff_tensor,
+    multilevel_coeff_tensor,
+    multilevel_level_slots,
+    multilevel_live_mask,
+    multilevel_message_size,
     plan_hierarchical,
+    plan_multilevel,
     plan_ring,
     plan_two_level_dft,
     simulate_hierarchical,
+    simulate_multilevel,
     simulate_ring_encode,
     simulate_two_level_dft,
     two_level_dft_matrix,
@@ -32,12 +42,15 @@ from .model import (  # noqa: F401
     DCI,
     ICI,
     FullyConnected,
+    Hierarchy,
     LinkCost,
     Ring,
     TimeEstimate,
     Topology,
     Torus2D,
     TwoLevel,
+    default_level_costs,
+    default_levels,
     make_topology,
     schedule_time,
 )

@@ -10,13 +10,23 @@ the estimator captures through per-link contention.
 
 Applicability matrix (the "universal promise" vs. structured generators):
 
-* ``general``      — prepare-shoot, hierarchical, allgather, ring
+* ``general``      — prepare-shoot, hierarchical, multilevel, allgather, ring
 * ``vandermonde``  — the above + draw-loose
 * ``dft``          — all of the above + butterfly + hierarchical-dft
+
+The ``multilevel`` candidate appears when the topology is a
+:class:`~repro.topo.model.Hierarchy` whose level product matches K: the plan
+factorization is taken from the topology itself, so the schedule's phases
+align with the hardware's levels by construction.
 
 A ``measured`` override hook replaces predicted times with wall-clock
 numbers (e.g. from benchmarks/bench_topology.py) without changing the
 selection logic — the calibration path the ROADMAP's follow-on names.
+
+Paper-notation glossary: ``K`` processors, ``p`` ports, ``C1`` rounds,
+``C2`` per-port elements (paper §I); ``I``/``G`` the two-level k_intra ×
+k_inter split; ``digit-reduction slots`` the §IV shoot buffer layout (one
+slot per (p+1)-ary numeral of the remaining target offset).
 """
 
 from __future__ import annotations
@@ -26,9 +36,14 @@ from dataclasses import dataclass, replace
 from repro.core.field import M31
 from repro.core.schedule import plan_butterfly, plan_draw_loose, plan_prepare_shoot
 
-from .hierarchical import plan_hierarchical, plan_ring, plan_two_level_dft
+from .hierarchical import (
+    plan_hierarchical,
+    plan_multilevel,
+    plan_ring,
+    plan_two_level_dft,
+)
 from .lower import LoweredSchedule, lower, lower_allgather
-from .model import TimeEstimate, Topology, TwoLevel
+from .model import Hierarchy, TimeEstimate, Topology, TwoLevel
 
 GENERATOR_KINDS = ("general", "vandermonde", "dft")
 
@@ -40,6 +55,7 @@ _PREFERENCE = (
     "draw-loose",
     "prepare-shoot",
     "hierarchical",
+    "multilevel",
     "ring",
     "allgather",
 )
@@ -81,13 +97,25 @@ class TuneResult:
 
 
 def _split_for(topo: Topology, K: int) -> int:
-    """k_intra for the hierarchical schedules: the topology's own fast-domain
-    size when it has one, else the most balanced divisor."""
+    """k_intra for the two-level hierarchical schedules: the topology's own
+    fast-domain size when it has one (for a Hierarchy, everything below the
+    outermost level), else the most balanced divisor."""
     if isinstance(topo, TwoLevel) and K % topo.k_intra == 0:
         return topo.k_intra
+    if isinstance(topo, Hierarchy) and topo.n == K and K % topo.levels[-1] == 0:
+        return K // topo.levels[-1]
     from .model import _near_square
 
     return _near_square(K)
+
+
+def _levels_for(topo: Topology, K: int) -> tuple[int, ...] | None:
+    """Factorization for the multi-level candidate: the Hierarchy's own
+    levels when they multiply to K and at least two are non-trivial."""
+    if isinstance(topo, Hierarchy) and topo.n == K:
+        if sum(1 for k in topo.levels if k > 1) >= 2:
+            return topo.levels
+    return None
 
 
 def candidates_for(
@@ -120,6 +148,9 @@ def candidates_for(
     k_intra = _split_for(topo, K)
     if 1 < k_intra < K:
         out.append(cand(plan_hierarchical(K, p, k_intra)))
+    levels = _levels_for(topo, K)
+    if levels is not None:
+        out.append(cand(plan_multilevel(K, p, levels)))
     if generator in ("vandermonde", "dft"):
         try:
             out.append(cand(plan_draw_loose(K, p, q, seed=seed)))

@@ -34,10 +34,40 @@ inter-group trunks. The schedules here keep each phase inside one level:
   k±1) followed by a local combine. No multi-hop messages, so zero link
   contention.
 
+* **recursive multi-level encode** (universal, any matrix, any K = Π K_j):
+  the generalization of the two-level schedule to an arbitrary hierarchy
+  ``levels = (K_0, …, K_{L−1})`` (innermost/fastest first). Phases:
+
+  1. *intra gather* over the level-0 domain (size K_0, fastest links);
+  2. *local contraction* — device with coordinates (c, i) forms one partial
+     sum per **per-level offset vector** l = (l_1, …, l_{L−1}), destined for
+     the device at ((c_1+l_1) mod K_1, …, (c_{L−1}+l_{L−1}) mod K_{L−1}, i).
+     Component-wise modular offsets (instead of the two-level (g+l) mod G)
+     are what keep every later shift inside ONE level — no mixed-radix
+     carries ever cross a level boundary;
+  3. *per-level digit-reduction shoot*, innermost outer level first: level j
+     runs ⌈log_{p+1}K_j⌉ §IV digit-reduction rounds over the l_j component,
+     every message traveling on level-j links only. Reducing cheap levels
+     first matters: the level-j messages still carry Π_{j″>j} K_{j″} live
+     outer combinations, so the bulky reductions ride the fast links.
+
+  C1 = ⌈log K_0⌉ + Σ_{j≥1} ⌈log K_j⌉; Σ_j (K_j−1)/p ≤ C2 with the level-j
+  term scaled by the live outer combinations Π_{j″>j} K_{j″} — exactly the
+  two-level formulas when L = 2, and ``plan_multilevel(K, p, (I, G))``
+  lowers to the SAME rounds as ``plan_hierarchical(K, p, I)`` (trivial
+  K_j = 1 levels contribute zero rounds, zero slots).
+
 Everything is validated on the cost-exact :class:`SyncSimulator`: the
 ``simulate_*`` functions here run the schedules message-by-message under the
 p-port constraints and return bit-exact outputs plus measured C1/C2 and
 per-round message maps (which ``topo.lower`` cross-checks analytically).
+
+Paper-notation glossary: ``K`` processors, ``p`` ports/round, ``C1`` rounds,
+``C2`` max-elements-per-port summed over rounds; ``I = k_intra`` / ``G =
+k_inter`` the two-level split; *digit-reduction slots* — the §IV shoot keeps
+one buffer slot per (p+1)-ary numeral of the remaining target offset and
+each round zeroes one digit by shipping the slots with digit_t = ρ to port
+ρ's partner (see ``core.schedule.digit_reduction_slots``).
 """
 
 from __future__ import annotations
@@ -235,6 +265,238 @@ def simulate_hierarchical(
                 w[dst, l - ((l // stride) % radix) * stride] = field.add(
                     w[dst, l - ((l // stride) % radix) * stride], val
                 )
+
+    out = np.array([w[k, 0] for k in range(K)], dtype=np.uint64)
+    return out, sim.stats
+
+
+# ---------------------------------------------------------------------------
+# recursive multi-level plan (K = Π K_j, see module doc)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MultiLevelPlan:
+    """Static schedule for the recursive K = Π K_j universal encode:
+    intra gather over level 0, local contraction into one slot per per-level
+    offset vector, then one digit-reduction shoot per outer level (innermost
+    first). ``levels`` is innermost → outermost; ``slot_bases[j-1]`` is the
+    (p+1)^⌈log K_j⌉ padded slot space of outer level j."""
+
+    K: int
+    p: int
+    levels: tuple[int, ...]
+    intra_rounds: tuple  # gather_rounds(levels[0], p)
+    level_shifts: tuple  # [j-1][t-1][rho-1] → shift in level-j coordinate units
+    slot_bases: tuple[int, ...]  # per outer level j: n_j = (p+1)^Ts_j
+    n_slots: int  # Π slot_bases
+
+    @property
+    def c1(self) -> int:
+        return len(self.intra_rounds) + sum(len(ts) for ts in self.level_shifts)
+
+    @property
+    def c2(self) -> int:
+        c = sum(max((cnt for _, cnt in ports), default=0) for ports in self.intra_rounds)
+        for j in range(1, len(self.levels)):
+            for t in range(1, len(self.level_shifts[j - 1]) + 1):
+                c += max(
+                    multilevel_message_size(self, j, t, rho)
+                    for rho in range(1, self.p + 1)
+                )
+        return c
+
+    @property
+    def algorithm(self) -> str:
+        return "multilevel"
+
+
+def plan_multilevel(K: int, p: int, levels) -> MultiLevelPlan:
+    levels = tuple(int(k) for k in levels)
+    prod = 1
+    for k in levels:
+        prod *= k
+    if not levels or prod != K or any(k < 1 for k in levels):
+        raise ValueError(f"levels must be positive with Π levels = K: {levels}, K={K}")
+    radix = p + 1
+    level_shifts = []
+    slot_bases = []
+    n_slots = 1
+    for kj in levels[1:]:
+        ts = ceil_log(kj, radix)
+        level_shifts.append(
+            tuple(
+                tuple(rho * radix ** (t - 1) for rho in range(1, p + 1))
+                for t in range(1, ts + 1)
+            )
+        )
+        slot_bases.append(radix**ts)
+        n_slots *= radix**ts
+    return MultiLevelPlan(
+        K=K,
+        p=p,
+        levels=levels,
+        intra_rounds=gather_rounds(levels[0], p),
+        level_shifts=tuple(level_shifts),
+        slot_bases=tuple(slot_bases),
+        n_slots=n_slots,
+    )
+
+
+def _slot_digits(plan: MultiLevelPlan) -> np.ndarray:
+    """(n_slots, L−1) per-outer-level digits of each slot index (level 1
+    least significant, base ``slot_bases[j-1]``)."""
+    L1 = len(plan.levels) - 1
+    out = np.zeros((plan.n_slots, L1), dtype=np.int64)
+    l = np.arange(plan.n_slots)
+    for j in range(L1):
+        out[:, j] = l % plan.slot_bases[j]
+        l = l // plan.slot_bases[j]
+    return out
+
+
+def multilevel_live_mask(plan: MultiLevelPlan) -> np.ndarray:
+    """(n_slots,) bool: slot live iff every per-level digit < K_j (dead
+    slots are identically zero and never shipped)."""
+    digits = _slot_digits(plan)
+    outer = np.asarray(plan.levels[1:], dtype=np.int64)
+    return np.all(digits < outer[None, :], axis=1) if outer.size else np.ones(
+        plan.n_slots, dtype=bool
+    )
+
+
+def multilevel_level_slots(plan: MultiLevelPlan, j: int, t: int, rho: int):
+    """(dst_slots, src_slots) global slot indices of outer level ``j``
+    (1-based), reduction round ``t`` (1-based), port ``rho``. Senders: the
+    level-j digit has digit_t = ρ with lower digits 0 and is a live
+    coordinate (< K_j); levels below j are already fully reduced (digit 0);
+    levels above j still hold any live coordinate. Receiver slot: the same
+    index with the level-j digit lowered by ρ·(p+1)^{t-1}."""
+    radix = plan.p + 1
+    stride = radix ** (t - 1)
+    digits = _slot_digits(plan)
+    dj = digits[:, j - 1]
+    ok = (dj // stride) % radix == rho
+    ok &= dj % stride == 0
+    ok &= dj < plan.levels[j]
+    for j2 in range(1, j):
+        ok &= digits[:, j2 - 1] == 0
+    for j2 in range(j + 1, len(plan.levels)):
+        ok &= digits[:, j2 - 1] < plan.levels[j2]
+    src = np.nonzero(ok)[0]
+    slot_stride = 1
+    for j2 in range(1, j):
+        slot_stride *= plan.slot_bases[j2 - 1]
+    dst = src - rho * stride * slot_stride
+    return dst, src
+
+
+def multilevel_message_size(plan: MultiLevelPlan, j: int, t: int, rho: int) -> int:
+    """Live elements shipped on port ρ in level-j reduction round t."""
+    return int(multilevel_level_slots(plan, j, t, rho)[1].size)
+
+
+def _outer_coords(plan: MultiLevelPlan) -> np.ndarray:
+    """(K, L−1) outer coordinates of every device (level 1 first)."""
+    L1 = len(plan.levels) - 1
+    out = np.zeros((plan.K, L1), dtype=np.int64)
+    c = np.arange(plan.K) // plan.levels[0]
+    for j in range(L1):
+        out[:, j] = c % plan.levels[j + 1]
+        c = c // plan.levels[j + 1]
+    return out
+
+
+def multilevel_dev_shift(plan: MultiLevelPlan, k: int, j: int, s: int) -> int:
+    """Device id after shifting the level-j coordinate of device k by s."""
+    stride = 1
+    for kj in plan.levels[:j]:
+        stride *= kj
+    cj = (k // stride) % plan.levels[j]
+    return k + (((cj + s) % plan.levels[j]) - cj) * stride
+
+
+def multilevel_coeff_tensor(plan: MultiLevelPlan, A: np.ndarray) -> np.ndarray:
+    """coef[k, u, l] = A[row, col] with row = device (same outer coords,
+    (i−u) mod K_0) and col = device (outer coords shifted component-wise by
+    slot l's per-level digits, same i), masked to live slots — the
+    multi-level analogue of :func:`hierarchical_coeff_tensor`."""
+    K, K0, n = plan.K, plan.levels[0], plan.n_slots
+    k = np.arange(K)
+    i = k % K0
+    u = np.arange(K0)
+    rows = ((k // K0) * K0)[:, None] + (i[:, None] - u[None, :]) % K0  # (K, K0)
+    oc = _outer_coords(plan)  # (K, L-1)
+    digits = _slot_digits(plan)  # (n, L-1)
+    t_outer = np.zeros((K, n), dtype=np.int64)
+    mult = 1
+    for j, kj in enumerate(plan.levels[1:]):
+        t_outer += ((oc[:, j][:, None] + digits[:, j][None, :]) % kj) * mult
+        mult *= kj
+    cols = t_outer * K0 + i[:, None]  # (K, n)
+    coef = np.asarray(A)[rows[:, :, None], cols[:, None, :]]  # (K, K0, n)
+    return coef * multilevel_live_mask(plan)[None, None, :]
+
+
+def simulate_multilevel(
+    x: np.ndarray, A: np.ndarray, plan: MultiLevelPlan, field: Field
+) -> tuple[np.ndarray, SimStats]:
+    """Message-passing execution of the recursive schedule under the p-port
+    constraints; bit-exact ``x @ A`` for ANY matrix A and ANY factorization.
+    Returns (x̃, stats)."""
+    K, p, K0 = plan.K, plan.p, plan.levels[0]
+    sim = SyncSimulator(K, p)
+    x = field.asarray(x)
+    A = field.asarray(A)
+
+    # ---- intra gather over level 0: storage[k][u] = x at (i-u) % K0 -------
+    storage: list[list] = [[x[k]] for k in range(K)]
+    for ports in plan.intra_rounds:
+        msgs = {}
+        for k in range(K):
+            g, i = divmod(k, K0)
+            for s, cnt in ports:
+                msgs[(k, g * K0 + (i + s) % K0)] = storage[k][:cnt]
+        delivered = sim.exchange(msgs)
+        new = [list(st) for st in storage]
+        for k in range(K):
+            g, i = divmod(k, K0)
+            for s, cnt in ports:
+                src = g * K0 + (i - s) % K0
+                new[k].extend(delivered[(src, k)])
+        storage = new
+    for k in range(K):
+        assert len(storage[k]) == K0, "intra gather must cover the level-0 domain"
+
+    # ---- local contraction into the per-level offset slots ----------------
+    coef = multilevel_coeff_tensor(plan, A)
+    w = np.zeros((K, plan.n_slots), dtype=np.uint64)
+    live = multilevel_live_mask(plan)
+    for k in range(K):
+        for l in np.nonzero(live)[0]:
+            acc = np.uint64(0)
+            for u in range(K0):
+                acc = field.add(acc, field.mul(storage[k][u], coef[k, u, l]))
+            w[k, int(l)] = acc
+
+    # ---- per-level digit-reduction shoot, innermost outer level first -----
+    for j in range(1, len(plan.levels)):
+        for t, shifts in enumerate(plan.level_shifts[j - 1], start=1):
+            msgs = {}
+            for k in range(K):
+                for rho, s in enumerate(shifts, start=1):
+                    dst_slots, src_slots = multilevel_level_slots(plan, j, t, rho)
+                    if src_slots.size == 0:
+                        continue
+                    dst_dev = multilevel_dev_shift(plan, k, j, s)
+                    msgs[(k, dst_dev)] = [
+                        (int(ld), w[k, int(ls)])
+                        for ld, ls in zip(dst_slots, src_slots)
+                    ]
+            delivered = sim.exchange(msgs)
+            for (src, dst), items in delivered.items():
+                for ld, val in items:
+                    w[dst, ld] = field.add(w[dst, ld], val)
 
     out = np.array([w[k, 0] for k in range(K)], dtype=np.uint64)
     return out, sim.stats

@@ -12,6 +12,13 @@ The lowerings mirror the simulators exactly, including the small-K edge
 cases (self-sends skipped, duplicate destinations deduplicated, dead slots
 never shipped) — an analytically recomputed schedule that disagrees with the
 simulation by even one message is a bug, not an approximation.
+
+Paper-notation glossary: ``K`` processors, ``p`` ports per round, ``C1`` =
+round count, ``C2`` = Σ over rounds of the largest per-port message (field
+elements); ``I``/``G`` the two-level k_intra × k_inter split; *digit-
+reduction slots* — the §IV shoot's buffer layout, one slot per (p+1)-ary
+numeral of the remaining target offset, round t zeroing digit t (see
+``core.schedule.digit_reduction_slots``).
 """
 
 from __future__ import annotations
@@ -29,10 +36,13 @@ from repro.core.schedule import (
 
 from .hierarchical import (
     HierarchicalPlan,
+    MultiLevelPlan,
     RingPlan,
     TwoLevelDFTPlan,
     gather_rounds,
     hier_shoot_message_size,
+    multilevel_dev_shift,
+    multilevel_message_size,
     ring_rounds,
 )
 from .model import TimeEstimate, Topology, round_link_loads, schedule_time
@@ -181,6 +191,31 @@ def rounds_hierarchical(plan: HierarchicalPlan) -> list[dict]:
     return rounds
 
 
+def rounds_multilevel(plan: MultiLevelPlan) -> list[dict]:
+    """Recursive K = Π K_j encode: level-0 doubling gather, then one §IV
+    digit-reduction shoot per outer level (innermost first), every message
+    shifting exactly one level's coordinate (live slots only)."""
+    K, K0 = plan.K, plan.levels[0]
+    rounds = []
+    for ports in plan.intra_rounds:
+        msgs = {}
+        for k in range(K):
+            g, i = divmod(k, K0)
+            for s, cnt in ports:
+                msgs[(k, g * K0 + (i + s) % K0)] = cnt
+        rounds.append(msgs)
+    for j in range(1, len(plan.levels)):
+        for t, shifts in enumerate(plan.level_shifts[j - 1], start=1):
+            msgs = {}
+            for rho, s in enumerate(shifts, start=1):
+                sz = multilevel_message_size(plan, j, t, rho)
+                if sz:
+                    for k in range(K):
+                        msgs[(k, multilevel_dev_shift(plan, k, j, s))] = sz
+            rounds.append(msgs)
+    return rounds
+
+
 def rounds_two_level_dft(plan: TwoLevelDFTPlan) -> list[dict]:
     """Cooley–Tukey: intra butterfly within contiguous groups, then inter
     butterfly over stride-I columns (1 element per message throughout)."""
@@ -222,6 +257,10 @@ def lower(plan, inverse: bool = False) -> LoweredSchedule:
     if isinstance(plan, HierarchicalPlan):
         return LoweredSchedule(
             "hierarchical", plan.K, plan.p, tuple(rounds_hierarchical(plan))
+        )
+    if isinstance(plan, MultiLevelPlan):
+        return LoweredSchedule(
+            "multilevel", plan.K, plan.p, tuple(rounds_multilevel(plan))
         )
     if isinstance(plan, TwoLevelDFTPlan):
         return LoweredSchedule(

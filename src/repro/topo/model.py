@@ -18,6 +18,20 @@ declaratively and prices an arbitrary round schedule on them:
 
 On :class:`FullyConnected` this collapses to the paper's model exactly:
 ``total = C1·α + C2·β·payload`` (each message has a private link).
+
+Paper-notation glossary (used throughout ``repro.topo``):
+
+* ``K``  — number of processors; each holds one packet ``x_k`` and must end
+  with ``x̃_k = (x @ A)_k`` (paper §I).
+* ``p``  — ports per processor: per round every processor sends ≤ p and
+  receives ≤ p messages (the synchronous p-port model).
+* ``C1`` — round count of a schedule; ``C2`` — Σ over rounds of the largest
+  message (field elements per port) — the paper's two cost coordinates.
+* ``α/β`` — per-link startup seconds / seconds per element (Hockney): the
+  refinement this module adds on top of the paper's uniform round cost.
+* ``I, G`` — the two-level factorization K = I·G (``k_intra`` × ``k_inter``);
+  :class:`Hierarchy` generalizes to K = Π_j K_j with level 0 innermost
+  (fastest links) and level L−1 outermost (slowest).
 """
 
 from __future__ import annotations
@@ -178,6 +192,93 @@ class TwoLevel(Topology):
         return self.intra if link[0] == "intra" else self.inter
 
 
+def default_level_costs(
+    n_levels: int, lo: LinkCost = ICI, hi: LinkCost = DCI
+) -> tuple[LinkCost, ...]:
+    """Per-level α/β defaults for an ``n_levels``-deep :class:`Hierarchy`:
+    innermost = ``lo`` (ICI), outermost = ``hi`` (DCI), intermediate levels
+    geometrically interpolated (so a 2-level hierarchy prices exactly like
+    TwoLevel and a 3-level chip < slice < pod gets a √(lo·hi) slice tier)."""
+    if n_levels <= 1:
+        return (lo,) * max(n_levels, 1)
+    costs = [lo]
+    for j in range(1, n_levels - 1):
+        f = j / (n_levels - 1)
+        costs.append(
+            LinkCost(
+                alpha=lo.alpha * (hi.alpha / lo.alpha) ** f,
+                beta=lo.beta * (hi.beta / lo.beta) ** f,
+            )
+        )
+    costs.append(hi)
+    return tuple(costs)
+
+
+@dataclass(frozen=True)
+class Hierarchy(Topology):
+    """K = Π_j K_j recursive hierarchy (chip < slice < pod < …): processor
+    k has mixed-radix coordinates (c_0, …, c_{L−1}) with level 0 least
+    significant — ``k = c_0 + K_0·(c_1 + K_1·(c_2 + …))``. Level 0 siblings
+    (same coordinates above level 0) have a private fast link per ordered
+    pair; two processors whose highest differing coordinate is level j ≥ 1
+    share ONE trunk per ordered pair of level-j domains under their common
+    parent — the same contention model as :class:`TwoLevel`, applied
+    recursively. ``Hierarchy(levels=(I, G))`` prices identically to
+    ``TwoLevel(k_intra=I, k_inter=G)``.
+
+    ``levels`` is innermost (fastest) → outermost (slowest); ``costs`` is the
+    matching per-level α/β tuple (default: :func:`default_level_costs`)."""
+
+    levels: tuple[int, ...]
+    costs: tuple[LinkCost, ...] | None = None
+    name: str = "hierarchy"
+
+    def __post_init__(self):
+        if not self.levels or any(k < 1 for k in self.levels):
+            raise ValueError(f"levels must be positive, got {self.levels}")
+        if self.costs is not None and len(self.costs) != len(self.levels):
+            raise ValueError(
+                f"need one LinkCost per level: {len(self.costs)} costs "
+                f"for {len(self.levels)} levels"
+            )
+
+    @property
+    def n(self):  # type: ignore[override]
+        out = 1
+        for k in self.levels:
+            out *= k
+        return out
+
+    def coords(self, k: int) -> tuple[int, ...]:
+        """Mixed-radix digits of processor k, level 0 first."""
+        out = []
+        for sz in self.levels:
+            out.append(k % sz)
+            k //= sz
+        return tuple(out)
+
+    def level_cost(self, j: int) -> LinkCost:
+        costs = self.costs if self.costs is not None else default_level_costs(
+            len(self.levels)
+        )
+        return costs[j]
+
+    def route(self, src, dst):
+        if src == dst:
+            return ()
+        cs, cd = self.coords(src), self.coords(dst)
+        j = max(i for i in range(len(self.levels)) if cs[i] != cd[i])
+        if j == 0:
+            return (("lvl", 0, src, dst),)
+        # one trunk per ordered (src-domain, dst-domain) pair of level-j
+        # siblings under their common parent — ALL their traffic shares it
+        parent = tuple(cs[j + 1 :])
+        return (("lvl", j, parent, cs[j], cd[j]),)
+
+    def link_cost(self, link):
+        return self.level_cost(link[1])
+
+
 # ---------------------------------------------------------------------------
 # α-β estimator
 # ---------------------------------------------------------------------------
@@ -236,10 +337,13 @@ def make_topology(
     K: int,
     *,
     k_intra: int | None = None,
+    levels: tuple[int, ...] | None = None,
     intra: LinkCost = ICI,
     inter: LinkCost = DCI,
 ) -> Topology:
-    """Factory for the CLI / autotuner: name ∈ {flat, ring, torus, two-level}."""
+    """Factory for the CLI / autotuner: name ∈ {flat, ring, torus, two-level,
+    hierarchy}. ``hierarchy`` takes ``levels`` (innermost → outermost,
+    Π levels = K; default: balanced three-level split of K)."""
     if name == "flat":
         return FullyConnected(K, cost=intra)
     if name == "ring":
@@ -254,7 +358,40 @@ def make_topology(
         if K % ki:
             raise ValueError(f"two-level needs k_intra | K, got {ki}, K={K}")
         return TwoLevel(k_intra=ki, k_inter=K // ki, intra=intra, inter=inter)
+    if name == "hierarchy":
+        lv = tuple(levels) if levels else default_levels(K)
+        prod = 1
+        for k in lv:
+            prod *= k
+        if prod != K:
+            raise ValueError(f"hierarchy needs Π levels = K: {lv} vs K={K}")
+        return Hierarchy(levels=lv, costs=default_level_costs(len(lv), intra, inter))
     raise ValueError(f"unknown topology {name!r}")
+
+
+def default_levels(K: int, n_levels: int = 3) -> tuple[int, ...]:
+    """Balanced ``n_levels``-way factorization of K, innermost largest
+    (biggest domain on the fastest links): peel the most balanced divisor
+    off the outside repeatedly. Unsplittable remainders collapse to trivial
+    OUTERMOST levels (K prime → (K, 1, 1)), so level 0 is never trivial."""
+    outer = []  # outermost-first factors peeled so far
+    rest = K
+    for j in range(n_levels - 1, 0, -1):
+        if rest <= 1:
+            break
+        # outermost factor ≈ rest^(1/(j+1)); take the largest divisor ≤ that
+        target = round(rest ** (1.0 / (j + 1)))
+        d = 1
+        for cand in range(2, rest + 1):
+            if rest % cand == 0 and cand <= max(target, 2):
+                d = cand
+        if d == 1 or d == rest:  # no useful split left: keep rest innermost
+            break
+        outer.append(d)
+        rest //= d
+    out = [rest] + list(reversed(outer))  # innermost first
+    out += [1] * (n_levels - len(out))
+    return tuple(out)
 
 
 def _near_square(K: int) -> int:

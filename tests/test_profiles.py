@@ -51,6 +51,60 @@ def test_decode_rules_shard_kv_seq():
     assert r5.axes_for("kv_seq") == ("data", "model")
 
 
+def test_resolve_profile_picks_hierarchical_from_mesh_topology():
+    """Acceptance: make_production_mesh(multi_pod=True)'s derived three-level
+    chip < slice < pod hierarchy makes the autotuner select the recursive
+    multi-level encode for the coded-checkpoint DP axis; single pod selects
+    the two-level hierarchical schedule. Pure host-side (no devices)."""
+    from repro.launch.mesh import production_topology
+    from repro.launch.profiles import resolve_profile
+
+    prof = resolve_profile(multi_pod=True)
+    assert prof.algorithm == "multilevel"
+    assert prof.levels == (4, 4, 2) == prof.plan.levels
+    assert prof.topology.levels == production_topology(multi_pod=True).levels
+    assert prof.tune.chosen.plan is prof.plan
+
+    single = resolve_profile(multi_pod=False)
+    assert single.algorithm == "hierarchical"
+    assert single.levels == (4, 4)
+
+
+def test_resolve_profile_from_live_mesh_shape():
+    """mesh= path: the hierarchy is derived from the mesh's encode axes
+    (outermost → innermost), so a 2×2×2 mesh resolves to the multilevel
+    plan whose levels are the reversed axis sizes."""
+    from types import SimpleNamespace
+
+    from repro.launch.mesh import mesh_encode_levels, topology_for_mesh
+    from repro.launch.profiles import resolve_profile
+
+    mesh = SimpleNamespace(shape={"pod": 2, "slice": 2, "chip": 2})
+    axes = ("pod", "slice", "chip")
+    assert mesh_encode_levels(mesh, axes) == (2, 2, 2)
+    assert topology_for_mesh(mesh, axes).levels == (2, 2, 2)
+    prof = resolve_profile(mesh=mesh, axes=axes, payload_bytes=65536)
+    assert prof.algorithm == "multilevel" and prof.plan.levels == (2, 2, 2)
+    with pytest.raises(ValueError):
+        resolve_profile(mesh=mesh)  # axes required with mesh
+
+
+def test_resolve_profile_measured_override():
+    """Wall-clock calibration flows through: forcing every algorithm but
+    prepare-shoot to be slow flips the choice (the BENCH_topology.json
+    measured_s feedback path)."""
+    from repro.launch.profiles import resolve_profile
+
+    base = resolve_profile(multi_pod=True)
+    slow = {
+        c.algorithm: 1.0
+        for c in base.tune.candidates
+        if c.algorithm != "prepare-shoot"
+    }
+    forced = resolve_profile(multi_pod=True, measured={**slow, "prepare-shoot": 1e-9})
+    assert forced.algorithm == "prepare-shoot"
+
+
 def test_opt_profile_smoke_compiles_1dev(mesh):
     """OPT-profile rules lower a tiny train step on a 1x1 mesh."""
     from repro.configs import smoke_config

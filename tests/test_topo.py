@@ -25,19 +25,24 @@ from repro.topo import (
     DCI,
     ICI,
     FullyConnected,
+    Hierarchy,
     LinkCost,
     Ring,
     Torus2D,
     TwoLevel,
     autotune,
+    default_level_costs,
+    default_levels,
     lower,
     lower_allgather,
     make_topology,
     plan_hierarchical,
+    plan_multilevel,
     plan_ring,
     plan_two_level_dft,
     schedule_time,
     simulate_hierarchical,
+    simulate_multilevel,
     simulate_ring_encode,
     simulate_two_level_dft,
     two_level_dft_matrix,
@@ -80,6 +85,60 @@ def test_two_level_routing_and_costs():
     assert t.route(1, 6) == (("inter", 0, 1),)
     assert t.link_cost(("intra", 0, 3)) == ICI
     assert t.link_cost(("inter", 0, 1)) == DCI
+
+
+def test_hierarchy_routing_and_two_level_equivalence():
+    """Hierarchy((I, G)) routes and prices exactly like TwoLevel(I, G)."""
+    h = Hierarchy(levels=(4, 2), costs=(ICI, DCI))
+    t = TwoLevel(k_intra=4, k_inter=2)
+    assert h.n == t.n == 8
+    for src in range(8):
+        for dst in range(8):
+            assert h.hops(src, dst) == t.hops(src, dst)
+            if src != dst:
+                assert h.link_cost(h.route(src, dst)[0]) == t.link_cost(
+                    t.route(src, dst)[0]
+                )
+    low = lower(plan_hierarchical(8, 1, 4))
+    assert low.time(h, 64).total == pytest.approx(low.time(t, 64).total, rel=1e-12)
+
+
+def test_hierarchy_three_level_routing():
+    h = Hierarchy(levels=(2, 2, 2))
+    assert h.coords(5) == (1, 0, 1)
+    # same chip pair → private level-0 link; sibling slices share one trunk
+    assert h.route(0, 1) == (("lvl", 0, 0, 1),)
+    assert h.route(0, 2)[0][:2] == ("lvl", 1)
+    assert h.route(0, 2)[0] == h.route(1, 3)[0]  # all chip pairs share it
+    # pod crossing uses the level-2 trunk regardless of lower coords
+    assert h.route(0, 7)[0][:2] == ("lvl", 2)
+    assert h.route(0, 7)[0] == h.route(3, 4)[0]
+    # default per-level costs are monotone ICI → DCI
+    c = default_level_costs(3)
+    assert c[0] == ICI and c[-1] == DCI
+    assert c[0].alpha < c[1].alpha < c[2].alpha
+    assert c[0].beta < c[1].beta < c[2].beta
+
+
+def test_hierarchy_validation():
+    with pytest.raises(ValueError):
+        Hierarchy(levels=(4, 0))
+    with pytest.raises(ValueError):
+        Hierarchy(levels=(4, 2), costs=(ICI,))
+    with pytest.raises(ValueError):
+        make_topology("hierarchy", 8, levels=(2, 2))  # Π levels ≠ K
+    assert default_levels(8) == (2, 2, 2)
+    assert make_topology("hierarchy", 8).levels == (2, 2, 2)
+    # unsplittable remainders collapse OUTERMOST — level 0 is never trivial
+    assert default_levels(4) == (2, 2, 1)
+    assert default_levels(2) == (2, 1, 1)
+    assert default_levels(7) == (7, 1, 1)
+    assert default_levels(6) == (3, 2, 1)
+    # the factory honors the intra/inter cost overrides at the endpoints
+    fast = LinkCost(alpha=1e-7, beta=1e-12)
+    slow = LinkCost(alpha=1e-4, beta=1e-8)
+    h = make_topology("hierarchy", 8, intra=fast, inter=slow)
+    assert h.level_cost(0) == fast and h.level_cost(2) == slow
 
 
 def test_schedule_time_collapses_to_paper_model_on_flat():
@@ -225,6 +284,87 @@ def test_hierarchical_every_factorization_matches_oracle(params):
 
 
 # ---------------------------------------------------------------------------
+# recursive multi-level exactness
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "K,levels,p",
+    [
+        (8, (2, 2, 2), 1),
+        (8, (2, 2, 2), 2),
+        (12, (3, 2, 2), 1),
+        (16, (2, 2, 2, 2), 1),
+        (16, (4, 2, 2), 2),
+        (24, (2, 3, 4), 1),
+        (30, (5, 3, 2), 2),
+    ],
+)
+def test_multilevel_simulator_exact_and_counted(K, levels, p):
+    A = random_matrix(F, K, seed=K + levels[0])
+    x = random_vector(F, K, seed=p)
+    plan = plan_multilevel(K, p, levels)
+    out, st = simulate_multilevel(x, A, plan, F)
+    np.testing.assert_array_equal(out, encode_oracle(x, A))
+    assert st.C1 == plan.c1 and st.C2 == plan.c2
+    low = lower(plan)
+    assert list(low.rounds) == st.round_messages
+
+
+def _deep_factorizations(K, min_levels=3):
+    """Ordered factorizations of K into ≥ min_levels factors, each ≥ 2."""
+    out = []
+
+    def rec(rest, acc):
+        if rest == 1:
+            if len(acc) >= min_levels:
+                out.append(tuple(acc))
+            return
+        for d in range(2, rest + 1):
+            if rest % d == 0:
+                rec(rest // d, acc + [d])
+
+    rec(K, [])
+    return out
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.sampled_from([(K, lv, p) for K in (8, 12, 16)
+                        for lv in _deep_factorizations(K) for p in (1, 2)]))
+def test_multilevel_every_deep_factorization_matches_oracle(params):
+    """Property (hyputil-guarded): EVERY factorization of K ∈ {8, 12, 16}
+    into ≥ 3 levels is bit-exact against the matrix oracle, with the
+    lowering matching the simulation message-for-message."""
+    K, levels, p = params
+    A = random_matrix(F, K, seed=K * 31 + levels[0])
+    x = random_vector(F, K, seed=p)
+    plan = plan_multilevel(K, p, levels)
+    out, st = simulate_multilevel(x, A, plan, F)
+    np.testing.assert_array_equal(out, encode_oracle(x, A))
+    assert list(lower(plan).rounds) == st.round_messages
+
+
+@pytest.mark.parametrize("K,I,p", [(8, 2, 1), (12, 3, 1), (16, 4, 2)])
+def test_multilevel_collapses_to_two_level(K, I, p):
+    """A trivial level is a no-op: the recursive plan with levels (I, G, 1)
+    or (I, 1, G) lowers to the SAME rounds as the two-level plan — so its
+    cost on every topology is identical."""
+    from repro.topo.lower import rounds_hierarchical, rounds_multilevel
+
+    G = K // I
+    h = plan_hierarchical(K, p, I)
+    ref = rounds_hierarchical(h)
+    for levels in [(I, G), (I, G, 1), (I, 1, G), (I, G, 1, 1)]:
+        m = plan_multilevel(K, p, levels)
+        assert rounds_multilevel(m) == ref, levels
+        assert m.c1 == h.c1 and m.c2 == h.c2, levels
+    topo = TwoLevel(k_intra=I, k_inter=G)
+    t_h = lower(h).time(topo, 32).total
+    t_m = lower(plan_multilevel(K, p, (I, G, 1))).time(topo, 32).total
+    assert t_m == pytest.approx(t_h, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
 # autotuner
 # ---------------------------------------------------------------------------
 
@@ -232,6 +372,7 @@ TOPOS = {
     "flat": FullyConnected(16),
     "ring": Ring(16),
     "two-level": TwoLevel(k_intra=4, k_inter=4),
+    "hierarchy": Hierarchy(levels=(4, 2, 2)),
 }
 
 
@@ -254,6 +395,8 @@ def test_autotuner_c1_matches_simulator_on_every_topology(topo_name):
             _, st = simulate_draw_loose(x, cand.plan, f)
         elif cand.algorithm == "hierarchical":
             _, st = simulate_hierarchical(x, A, cand.plan, f)
+        elif cand.algorithm == "multilevel":
+            _, st = simulate_multilevel(x, A, cand.plan, f)
         elif cand.algorithm == "hierarchical-dft":
             _, st = simulate_two_level_dft(x, cand.plan, f)
         elif cand.algorithm == "ring":
@@ -271,6 +414,18 @@ def test_autotuner_prefers_level_aligned_schedule_on_two_level():
     assert r.algorithm == "hierarchical"
     flat = autotune(16, 1, 65536, FullyConnected(16), generator="general")
     assert flat.algorithm == "prepare-shoot"
+
+
+def test_autotuner_prefers_multilevel_on_deep_hierarchy():
+    """On a 3-level hierarchy the recursive schedule wins (its phases align
+    with the levels); the plan factorization is the topology's own levels."""
+    topo = Hierarchy(levels=(4, 4, 2))
+    r = autotune(32, 1, 65536, topo, generator="general")
+    assert r.algorithm == "multilevel"
+    assert r.chosen.plan.levels == (4, 4, 2)
+    # the multilevel candidate is NOT offered on non-hierarchy topologies
+    flat = autotune(32, 1, 65536, FullyConnected(32), generator="general")
+    assert all(c.algorithm != "multilevel" for c in flat.candidates)
 
 
 def test_autotuner_prefers_neighbor_schedule_on_ring():

@@ -1,18 +1,25 @@
 """Topology benchmark: flat vs. two-level vs. three-level encode on 8
-forced-host devices.
+forced-host devices, plus the calibration sweep the α/β fitter consumes.
 
 Times ``ps_encode_jit`` (1D mesh), ``hierarchical_encode_jit`` (4×2
 inter×intra mesh), ``multilevel_encode_jit`` (2×2×2 pod×slice×chip mesh —
 the recursive three-level schedule) and the ``allgather_encode_jit`` foil on
-the same Vandermonde encode, in a subprocess with
+the same Vandermonde encode ACROSS A PAYLOAD SWEEP, in a subprocess with
 ``--xla_force_host_platform_device_count=8`` (the override must not leak
-into sibling benchmarks). Emits ``results/BENCH_topology.json`` with the
-measured wall times next to the autotuner's α-β predictions on the matching
-two-level topology, plus a ``three_level`` block with the same sweep priced
-on the ``Hierarchy(levels=(2, 2, 2))`` model — the JSON's ``measured_s``
-maps (seconds) feed straight back into ``autotune(..., measured=...)`` /
-``launch.profiles.resolve_profile(measured=...)`` and
-``launch/perf_report.py`` renders both tables.
+into sibling benchmarks). Emits ``results/BENCH_topology.json`` with:
+
+* the measured wall times next to the autotuner's α-β predictions on the
+  matching two-level topology (``measured_s`` feeds straight back into
+  ``autotune(..., measured=...)`` / ``resolve_profile(measured=...)``);
+* a ``three_level`` block with the same sweep priced on the
+  ``Hierarchy(levels=(2, 2, 2))`` model;
+* a ``calibration`` block — one sample per (algorithm, payload) with the
+  measured seconds and the per-round ``{level, msgs, elems}`` rows
+  (``topo.round_features`` on the three-level model) that
+  ``topo.fit_level_costs`` least-squares into per-level α/β (the ROADMAP
+  calibration item), plus the fitted costs themselves.
+
+``launch/perf_report.py`` renders the predicted-vs-measured tables.
 """
 
 from __future__ import annotations
@@ -27,6 +34,8 @@ from .common import emit
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+PAYLOADS = (1 << 12, 1 << 14, 1 << 16)
+
 _CHILD = """
     import json, time
     import numpy as np, jax, jax.numpy as jnp
@@ -37,12 +46,12 @@ _CHILD = """
         allgather_encode_jit, hierarchical_encode_jit, multilevel_encode_jit,
         ps_encode_jit)
 
-    K, PAY = 8, 1 << 14
+    K = 8
+    PAYLOADS = %(payloads)r
     f = Field(M31)
     A = np.asarray(vandermonde(f, distinct_points(f, K, seed=0)))
-    x = jnp.asarray(random_vector(f, (K, PAY), seed=1).astype(np.uint32))
 
-    def timeit(fn, iters=5):
+    def timeit(fn, x, iters=5):
         jax.block_until_ready(fn(x))
         ts = []
         for _ in range(iters):
@@ -59,15 +68,18 @@ _CHILD = """
     fn_h, _ = hierarchical_encode_jit(mesh2, "inter", "intra", A, p=1)
     fn_m, _ = multilevel_encode_jit(mesh3, ("pod", "slice", "chip"), A, p=1)
     fn_ag = allgather_encode_jit(mesh1, "enc", A)
-    o1, o2, o3 = np.asarray(fn_ps(x)), np.asarray(fn_h(x)), np.asarray(fn_m(x))
-    assert np.array_equal(o1, o2), "flat and hierarchical disagree"
-    assert np.array_equal(o1, o3), "flat and multilevel disagree"
-    print(json.dumps({
-        "prepare-shoot": timeit(fn_ps),
-        "hierarchical": timeit(fn_h),
-        "multilevel": timeit(fn_m),
-        "allgather": timeit(fn_ag),
-    }))
+    fns = {"prepare-shoot": fn_ps, "hierarchical": fn_h,
+           "multilevel": fn_m, "allgather": fn_ag}
+    sweep = {alg: {} for alg in fns}
+    for pay in PAYLOADS:
+        x = jnp.asarray(random_vector(f, (K, pay), seed=1).astype(np.uint32))
+        outs = {alg: np.asarray(fn(x)) for alg, fn in fns.items()}
+        ref = outs["prepare-shoot"]
+        for alg, o in outs.items():
+            assert np.array_equal(ref, o), f"flat and {alg} disagree"
+        for alg, fn in fns.items():
+            sweep[alg][str(pay)] = timeit(fn, x)
+    print(json.dumps(sweep))
 """
 
 
@@ -76,20 +88,32 @@ def run():
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     r = subprocess.run(
-        [sys.executable, "-c", textwrap.dedent(_CHILD)],
+        [sys.executable, "-c", textwrap.dedent(_CHILD % {"payloads": PAYLOADS})],
         capture_output=True,
         text=True,
         env=env,
-        timeout=600,
+        timeout=1200,
     )
     if r.returncode != 0:
         raise RuntimeError(f"bench_topology child failed:\n{r.stdout}\n{r.stderr}")
-    measured_us = json.loads(r.stdout.strip().splitlines()[-1])
+    sweep = json.loads(r.stdout.strip().splitlines()[-1])
 
     # α-β predictions for the same scenario on the matching topologies
-    from repro.topo import Hierarchy, TwoLevel, autotune
+    from repro.core.schedule import plan_prepare_shoot
+    from repro.topo import (
+        Hierarchy,
+        TwoLevel,
+        autotune,
+        fit_level_costs,
+        lower,
+        lower_allgather,
+        plan_hierarchical,
+        plan_multilevel,
+        round_features,
+    )
 
     K, PAY = 8, 1 << 14
+    measured_us = {alg: times[str(PAY)] for alg, times in sweep.items()}
     topo = TwoLevel(k_intra=2, k_inter=4)
     result = autotune(K, 1, PAY * 4, topo, generator="vandermonde")
     predicted = {
@@ -126,6 +150,37 @@ def run():
             c.algorithm: {"us": c.predicted_time * 1e6, "c1": c.c1, "c2": c.c2}
             for c in result3.candidates
         },
+    }
+    # calibration block: per-(algorithm, payload) wall seconds + the
+    # per-round {level, msgs, elems} rows fit_level_costs consumes
+    rounds_by_alg = {
+        "prepare-shoot": lower(plan_prepare_shoot(K, 1)).rounds,
+        "hierarchical": lower(plan_hierarchical(K, 1, 2)).rounds,
+        "multilevel": lower(plan_multilevel(K, 1, (2, 2, 2))).rounds,
+        "allgather": lower_allgather(K, 1).rounds,
+    }
+    samples = []
+    for alg, rounds in rounds_by_alg.items():
+        feats = round_features(rounds, topo3)
+        for pay_str, us in sweep[alg].items():
+            samples.append(
+                {
+                    "algorithm": alg,
+                    "payload_elems": int(pay_str),
+                    "wall_s": us * 1e-6,
+                    "rounds": feats,
+                }
+            )
+    fitted = fit_level_costs(samples, n_levels=3)
+    record["calibration"] = {
+        "model": "hierarchy levels=(2, 2, 2)",
+        "samples": samples,
+        "fitted_level_costs": [
+            {"level": j, "alpha_s": c.alpha, "beta_s_per_elem": c.beta}
+            for j, c in enumerate(fitted)
+        ],
+        "note": "forced-host CPU emulation — the fit demonstrates the "
+        "measured→α/β path; run on real ICI/DCI hardware for usable costs",
     }
     os.makedirs(os.path.join(REPO, "results"), exist_ok=True)
     with open(os.path.join(REPO, "results", "BENCH_topology.json"), "w") as fh:

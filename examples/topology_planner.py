@@ -23,7 +23,16 @@ Reading the output: on a hierarchy the ``multilevel`` row is the recursive
 schedule whose phases align with the topology's levels (gather on the
 fastest links, one digit-reduction shoot per level); ``contention`` is the
 worst number of messages sharing one link in any round — the quantity the
-level-aligned schedules are designed to keep off the slow trunks.
+level-aligned schedules are designed to keep off the slow trunks. On a
+``torus`` with a dft generator the ``butterfly-remap`` row is the
+Gray-relabeled butterfly whose partners are torus neighbors
+(``topo.remap_digits``).
+
+``--emit-ir`` additionally prints the chosen algorithm's compiled
+ScheduleIR: every communication round (port, transfers, elements per
+message, example src→dst pairs with their slot selectors) and every local
+contraction — the exact schedule the simulator interprets and
+``dist.collectives.ir_encode_jit`` executes.
 """
 
 from __future__ import annotations
@@ -31,7 +40,42 @@ from __future__ import annotations
 import argparse
 
 from repro.core.encode import default_q_for
+from repro.core.ir import CommRound, round_port_groups
 from repro.topo import autotune, make_topology
+
+
+def emit_ir(ir, max_pairs: int = 4) -> str:
+    """Human-readable dump of a compiled ScheduleIR."""
+    lines = [
+        f"ScheduleIR[{ir.algorithm}] K={ir.K} p={ir.p} "
+        f"C1={ir.c1} C2={ir.c2}"
+        + (f" placement={list(ir.placement)}" if ir.placement else "")
+    ]
+    rnd = 0
+    for step in ir.steps:
+        if isinstance(step, CommRound):
+            rnd += 1
+            lines.append(f"  round {rnd}:")
+            for g in round_port_groups(step):
+                pairs = " ".join(f"{s}->{d}" for s, d in g.pairs[:max_pairs])
+                more = "" if len(g.pairs) <= max_pairs else f" …(+{len(g.pairs) - max_pairs})"
+                slots = ",".join(f"{ss}->{ds}" for ss, ds in g.slots)
+                coeff = " coeffs" if g.coeffs_by_dst else ""
+                lines.append(
+                    f"    port {g.port} [{g.mode}] {len(g.slots)} elem/msg "
+                    f"slots[{slots}]{coeff}: {pairs}{more}"
+                )
+        else:
+            shape = (
+                "structure-only"
+                if step.coeffs is None
+                else "x".join(str(s) for s in step.coeffs.shape)
+            )
+            lines.append(
+                f"  local: {len(step.in_slots)} slots -> {len(step.out_slots)} "
+                f"slots (coeffs {shape})"
+            )
+    return "\n".join(lines)
 
 
 def main() -> None:
@@ -59,6 +103,12 @@ def main() -> None:
         "--generator", default="general", choices=("general", "vandermonde", "dft")
     )
     ap.add_argument("--q", type=int, default=None, help="field prime (default: auto)")
+    ap.add_argument(
+        "--emit-ir",
+        action="store_true",
+        help="print the chosen algorithm's compiled ScheduleIR "
+        "(rounds, transfers, slot selectors, local contractions)",
+    )
     args = ap.parse_args()
 
     q = args.q or default_q_for(args.K, args.p)
@@ -87,6 +137,9 @@ def main() -> None:
         f"\nchosen: {ch.algorithm} — C1={ch.c1} rounds, C2={ch.c2} elements/port, "
         f"predicted {ch.predicted_time * 1e6:.2f} µs"
     )
+    if args.emit_ir:
+        print()
+        print(emit_ir(ch.ir))
 
 
 if __name__ == "__main__":

@@ -5,7 +5,9 @@
 # - matrices.py       Vandermonde / DFT / Lagrange generator constructions
 # - schedule.py       static round schedules (prepare/shoot, butterfly, draw/loose)
 # - bounds.py         Lemmas 1-2 lower bounds, Theorems 1-4 closed forms, cost model
-# - simulator.py      cost-exact synchronous p-port network simulator
+# - ir.py             unified ScheduleIR: every plan compiles to one round-
+#                     schedule representation (+ rewrite passes)
+# - simulator.py      cost-exact p-port interpreter for any ScheduleIR
 # - prepare_shoot.py  universal algorithm, array-level jnp executor
 # - draw_loose.py     specific algorithms (butterfly, draw-and-loose, Lagrange)
 # - encode.py         public a2a_encode API with auto-selection
@@ -13,6 +15,17 @@
 from .bounds import CostModel  # noqa: F401
 from .encode import CostReport, a2a_encode, default_q_for, plan_for, rs_generator  # noqa: F401
 from .field import M31, NTT, Field  # noqa: F401
+from .ir import (  # noqa: F401
+    CommRound,
+    LocalOp,
+    ScheduleIR,
+    Transfer,
+    fuse_trivial_rounds,
+    ir_messages,
+    ir_permute_count,
+    relabel,
+    to_ir,
+)
 from .schedule import (  # noqa: F401
     ButterflyPlan,
     DrawLoosePlan,
@@ -21,3 +34,4 @@ from .schedule import (  # noqa: F401
     plan_draw_loose,
     plan_prepare_shoot,
 )
+from .simulator import SimStats, SyncSimulator, interpret  # noqa: F401

@@ -17,7 +17,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from .bounds import ceil_log, ps_params
-from .field import Field, shoup_precompute
+from .field import M31, Field, shoup_precompute
 from .matrices import digit_reversal_permutation
 
 
@@ -49,6 +49,34 @@ class PrepareShootPlan:
     @property
     def c2(self) -> int:
         return (self.m - 1) // self.p + (self.n - 1) // self.p
+
+    def to_ir(self, A=None, *, q: int = M31):
+        from .ir import ir_prepare_shoot
+
+        return ir_prepare_shoot(self, A, q=q)
+
+
+def gather_rounds(N: int, p: int) -> tuple[tuple[tuple[int, int], ...], ...]:
+    """Round schedule fully gathering N cyclic packets: each round every
+    processor sends a prefix of its (contiguous-offset) buffer to p partners.
+
+    Returns per round a tuple of ``(shift, count)`` ports: send buffer slots
+    [0, count) to processor k+shift (mod N). After round r the buffer holds
+    offsets [0, min((p+1)^r, N)) — ⌈log_{p+1}N⌉ rounds total, C2 = Σ max
+    count ≈ (N−1)/p (the optimal p-port all-gather of bounds.py). Shared by
+    the allgather baseline and the hierarchical/multilevel intra phases.
+    """
+    rounds = []
+    b = 1
+    while b < N:
+        ports = []
+        for rho in range(1, p + 1):
+            cnt = min(b, N - rho * b)
+            if cnt > 0:
+                ports.append((rho * b, cnt))
+        rounds.append(tuple(ports))
+        b = min(b * (p + 1), N)
+    return tuple(rounds)
 
 
 def plan_prepare_shoot(K: int, p: int) -> PrepareShootPlan:
@@ -211,6 +239,11 @@ class ButterflyPlan:
     def c2(self) -> int:
         return self.H
 
+    def to_ir(self, inverse: bool = False):
+        from .ir import ir_butterfly
+
+        return ir_butterfly(self, inverse=inverse)
+
 
 def plan_butterfly(K: int, p: int, q: int) -> ButterflyPlan:
     """Build the radix-(p+1) butterfly for K = (p+1)^H over GF(q).
@@ -334,6 +367,11 @@ class DrawLoosePlan:
         if self.draw_plan:
             c += self.draw_plan.c2
         return c
+
+    def to_ir(self):
+        from .ir import ir_draw_loose
+
+        return ir_draw_loose(self)
 
 
 def plan_draw_loose(K: int, p: int, q: int, seed: int = 0) -> DrawLoosePlan:

@@ -1,16 +1,22 @@
-"""Cost-exact synchronous p-port network simulator (paper §I model).
+"""Cost-exact synchronous p-port network simulator (paper §I model) — now a
+single generic :func:`interpret` over :class:`~repro.core.ir.ScheduleIR`.
 
-Independent host-side re-implementation of the algorithms via explicit
-message passing: every round is validated against the p-port constraints
-(each processor sends ≤ p and receives ≤ p messages, one per port, no
-self-messages) and C1/C2 are counted exactly as defined:
+Every algorithm family compiles to the same IR (``core/ir.py``), and ONE
+interpreter executes any IR message-by-message under the exact §I
+constraints: every round is validated against the p-port limits (each
+processor sends ≤ p and receives ≤ p messages, no self-messages) and C1/C2
+are counted exactly as defined:
 
     C1 = number of rounds
     C2 = Σ_t max_{messages m in round t} len(m)     (field elements)
 
-This is what EXPERIMENTS.md's paper-claims tables are produced from; the
-array-level jnp executors in ``prepare_shoot.py`` / ``draw_loose.py`` are
-cross-checked against both this simulator and the matrix oracle.
+The per-family ``simulate_*`` entry points are thin wrappers over
+``interpret(plan.to_ir(...))`` — kept for API compatibility and because they
+assert bit-exactness against the matrix oracle whenever the generator is at
+hand (the transition guarantee of the IR refactor). This is what
+EXPERIMENTS.md's paper-claims tables are produced from; the array-level jnp
+executors in ``prepare_shoot.py`` / ``draw_loose.py`` are cross-checked
+against both this interpreter and the matrix oracle.
 """
 
 from __future__ import annotations
@@ -20,12 +26,8 @@ from dataclasses import dataclass, field as dc_field
 import numpy as np
 
 from .field import Field
-from .schedule import (
-    ButterflyPlan,
-    DrawLoosePlan,
-    PrepareShootPlan,
-    butterfly_group_perms,
-)
+from .ir import INPUT_SLOT, CommRound, LocalOp, ScheduleIR, validate_round
+from .schedule import ButterflyPlan, DrawLoosePlan, PrepareShootPlan
 
 
 @dataclass
@@ -37,8 +39,8 @@ class SimStats:
     round_sizes: list = dc_field(default_factory=list)
     total_elements: int = 0  # Σ over all messages (not just max) — extra info
     # per-round message map {(src, dst): elements} — the exact communication
-    # pattern, consumed by repro.topo.lower to cross-check its analytically
-    # lowered schedules (hop counts, link contention) against the simulation
+    # pattern; equals ``ir_messages(plan.to_ir())`` message-for-message (the
+    # lowering repro.topo.lower prices on a topology)
     round_messages: list = dc_field(default_factory=list)
 
 
@@ -84,7 +86,82 @@ class SyncSimulator:
 
 
 # ---------------------------------------------------------------------------
-# prepare-and-shoot on the simulator (§IV, Algorithm 1)
+# THE interpreter: any ScheduleIR, message-by-message, cost-exact
+# ---------------------------------------------------------------------------
+
+
+def interpret(
+    ir: ScheduleIR, x: np.ndarray, field: Field
+) -> tuple[np.ndarray, SimStats]:
+    """Execute ``ir`` on input ``x`` (shape (K,), uint64 canonical mod q)
+    under the p-port constraints; returns (output, stats). Inputs and
+    outputs are in LOGICAL processor order — ``ir.placement`` (set by layout
+    passes like ``topo.passes.remap_digits``) is applied at the boundary."""
+    K = ir.K
+    x = field.asarray(np.asarray(x))
+    if x.shape != (K,):
+        raise ValueError(f"x must have shape ({K},), got {x.shape}")
+    place = (
+        np.asarray(ir.placement, dtype=np.int64)
+        if ir.placement is not None
+        else np.arange(K)
+    )
+    sim = SyncSimulator(K, ir.p)
+    zero = np.uint64(0)
+    buf: list[dict] = [{} for _ in range(K)]
+    for k in range(K):
+        buf[place[k]][INPUT_SLOT] = x[k]
+    for step in ir.steps:
+        if isinstance(step, CommRound):
+            validate_round(step)
+            msgs: dict = {}
+            modes: dict = {}
+            for t in step.transfers:
+                payload = []
+                for i, (ss, ds) in enumerate(t.slots):
+                    c = t.coeffs[i] if t.coeffs is not None else 1
+                    payload.append((ds, c, buf[t.src].get(ss, zero)))
+                msgs[(t.src, t.dst)] = payload
+                modes[(t.src, t.dst)] = t.mode
+            delivered = sim.exchange(msgs)
+            for pair, payload in delivered.items():
+                dst = pair[1]
+                store = modes[pair] == "store"
+                for ds, c, v in payload:
+                    if c != 1:
+                        v = field.mul(np.uint64(c), v)
+                    if store:
+                        buf[dst][ds] = v
+                    else:
+                        buf[dst][ds] = field.add(buf[dst].get(ds, zero), v)
+        elif isinstance(step, LocalOp):
+            if step.coeffs is None:
+                raise ValueError(
+                    "structure-only IR (LocalOp.coeffs=None) cannot be "
+                    "interpreted — recompile with the generator matrix"
+                )
+            n_in = len(step.in_slots)
+            cols = np.zeros((K, n_in), dtype=np.uint64)
+            for j, s in enumerate(step.in_slots):
+                for k in range(K):
+                    cols[k, j] = buf[k].get(s, zero)
+            out = np.zeros((K, len(step.out_slots)), dtype=np.uint64)
+            for j in range(n_in):
+                out = field.add(
+                    out, field.mul(step.coeffs[:, :, j], cols[:, j][:, None])
+                )
+            for k in range(K):
+                buf[k] = {s: out[k, i] for i, s in enumerate(step.out_slots)}
+        else:  # pragma: no cover
+            raise TypeError(f"unknown IR step {type(step).__name__}")
+    result = np.array(
+        [buf[place[k]].get(ir.out_slot, zero) for k in range(K)], dtype=np.uint64
+    )
+    return result, sim.stats
+
+
+# ---------------------------------------------------------------------------
+# per-family wrappers (compile → interpret; oracle-asserted when A is known)
 # ---------------------------------------------------------------------------
 
 
@@ -92,76 +169,9 @@ def simulate_prepare_shoot(
     x: np.ndarray, A: np.ndarray, plan: PrepareShootPlan, field: Field
 ) -> tuple[np.ndarray, SimStats]:
     """x: (K,) uint64, A: (K,K) uint64 over ``field``. Returns (x̃, stats)."""
-    K, p, m, n = plan.K, plan.p, plan.m, plan.n
-    sim = SyncSimulator(K, p)
-    x = field.asarray(x)
-    A = field.asarray(A)
-
-    # ---- prepare: every processor forwards its whole storage each round ----
-    # (shifts that collapse mod K — only in the K <= p+1 regime — are
-    # skipped: a self-send or duplicate-destination send carries no info)
-    storage: list[dict[int, np.uint64]] = [{k: x[k]} for k in range(K)]
-    for shifts in plan.prepare_shifts:
-        msgs = {}
-        for k in range(K):
-            items = sorted(storage[k].items())
-            for s in shifts:
-                dst = (k + s) % K
-                if dst != k:
-                    msgs[(k, dst)] = items
-        delivered = sim.exchange(msgs)
-        for (src, dst), items in delivered.items():
-            for r, val in items:
-                storage[dst][r] = val
-    # every processor k now holds x_r for r ∈ R_k^- (as a set)
-    for k in range(K):
-        expect = {(k - l) % K for l in range(m)}
-        assert set(storage[k]) == expect, f"prepare coverage wrong at {k}"
-
-    # ---- shoot: initialize w_{k, k+l·m} with the first-coverage mask -------
-    # (keep contribution of offset u toward variable l iff l*m + u < K;
-    #  exact for all K, p — see schedule.coeff_mask / DESIGN §11)
-    w: list[dict[int, np.uint64]] = []
-    for k in range(K):
-        wk = {}
-        for l in range(n):
-            col = (k + l * m) % K
-            acc = np.uint64(0)
-            for u in range(m):
-                if l * m + u < K:
-                    r = (k - u) % K
-                    acc = field.add(acc, field.mul(storage[k][r], A[r, col]))
-            wk[l] = acc
-        w.append(wk)
-
-    radix = p + 1
-    n_live = -(-K // m)  # slots l with l*m >= K are all-zero: never sent
-    for t, shifts in enumerate(plan.shoot_shifts, start=1):
-        stride = radix ** (t - 1)
-        msgs = {}
-        for k in range(K):
-            for rho, s in enumerate(shifts, start=1):
-                dst = (k + s) % K
-                ls = [
-                    l
-                    for l in range(n_live)
-                    if (l // stride) % radix == rho and l % stride == 0
-                ]
-                if ls:
-                    msgs[(k, dst)] = [(l, w[k][l]) for l in ls]
-        delivered = sim.exchange(msgs)
-        for (src, dst), items in delivered.items():
-            for l, val in items:
-                lp = l - ((l // stride) % radix) * stride
-                w[dst][lp] = field.add(w[dst][lp], val)
-
-    out = np.array([w[k][0] for k in range(K)], dtype=np.uint64)
-    return out, sim.stats
-
-
-# ---------------------------------------------------------------------------
-# DFT butterfly on the simulator (§V-A)
-# ---------------------------------------------------------------------------
+    out, stats = interpret(plan.to_ir(A, q=field.q), x, field)
+    np.testing.assert_array_equal(out, field.matmul(field.asarray(x), A))
+    return out, stats
 
 
 def simulate_butterfly(
@@ -169,83 +179,13 @@ def simulate_butterfly(
 ) -> tuple[np.ndarray, SimStats]:
     """Round t: every processor broadcasts its Q to the p digit-t partners
     and combines the radix received values (own + p) with the twiddle row."""
-    K, p, H, radix = plan.K, plan.p, plan.H, plan.radix
-    sim = SyncSimulator(K, p)
-    q = field.asarray(v).copy()
-    rounds = range(H - 1, -1, -1) if inverse else range(H)
-    for t in rounds:
-        perms = butterfly_group_perms(K, radix, t)
-        msgs = {}
-        for k in range(K):
-            for dst_map in perms:
-                msgs[(k, int(dst_map[k]))] = [q[k]]
-        delivered = sim.exchange(msgs)
-        received = {k: {} for k in range(K)}
-        step = radix**t
-        for k in range(K):
-            received[k][(k // step) % radix] = q[k]
-        for (src, dst), payload in delivered.items():
-            received[dst][(src // step) % radix] = payload[0]
-        tw = plan.inv_twiddles[t] if inverse else plan.twiddles[t]
-        new_q = np.zeros_like(q)
-        for k in range(K):
-            acc = np.uint64(0)
-            for rho in range(radix):
-                acc = field.add(acc, field.mul(np.uint64(tw[k, rho]), received[k][rho]))
-            new_q[k] = acc
-        q = new_q
-    return q, sim.stats
-
-
-# ---------------------------------------------------------------------------
-# draw-and-loose on the simulator (§V-B) — subgroup composition
-# ---------------------------------------------------------------------------
+    return interpret(plan.to_ir(inverse=inverse), v, field)
 
 
 def simulate_draw_loose(
     x: np.ndarray, plan: DrawLoosePlan, field: Field
 ) -> tuple[np.ndarray, SimStats]:
-    """Runs the draw phase (Z parallel M-sized prepare-and-shoots, merged
-    round-by-round so port constraints are checked globally) then the loose
-    phase (M parallel Z-point butterflies). For simplicity each sub-phase is
-    simulated on its own simulator and the stats are combined — the parallel
-    subgroup operations share rounds (disjoint processor groups), so C1/C2
-    are those of a single subgroup's run (the max across groups, which are
-    identical by symmetry)."""
-    K, M, Z = plan.K, plan.M, plan.Z
-    f = field
-    x = f.asarray(x)
-    stats = SimStats(K=K, p=plan.p)
-
-    # draw phase: subgroup j = processors {j + Z*i}, runs M×M prepare-and-shoot
-    F = np.zeros(K, dtype=np.uint64)
-    if plan.draw_plan is not None:
-        draw_stats = None
-        for j in range(Z):
-            idx = j + Z * np.arange(M)
-            sub_out, st = simulate_prepare_shoot(x[idx], plan.draw_matrix, plan.draw_plan, f)
-            F[idx] = sub_out
-            draw_stats = st
-        stats.C1 += draw_stats.C1
-        stats.C2 += draw_stats.C2
-        stats.round_sizes += draw_stats.round_sizes
-    else:
-        F[:] = x
-    # local scale α_i^{rev(j)} — no communication
-    F = f.mul(F, plan.local_scale.astype(np.uint64))
-
-    # loose phase: group i = processors {Z*i + j}, runs Z-point butterfly
-    out = np.zeros(K, dtype=np.uint64)
-    if plan.loose_plan is not None:
-        loose_stats = None
-        for i in range(M):
-            idx = Z * i + np.arange(Z)
-            sub_out, st = simulate_butterfly(F[idx], plan.loose_plan, f)
-            out[idx] = sub_out
-            loose_stats = st
-        stats.C1 += loose_stats.C1
-        stats.C2 += loose_stats.C2
-        stats.round_sizes += loose_stats.round_sizes
-    else:
-        out[:] = F
-    return out, stats
+    """Draw phase (Z parallel M-sized prepare-and-shoots, merged round-by-
+    round so the port constraints are checked globally), the local scale,
+    then the loose phase (M parallel Z-point butterflies, also merged)."""
+    return interpret(plan.to_ir(), x, field)

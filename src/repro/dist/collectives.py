@@ -1,19 +1,29 @@
-"""shard_map executors for the paper's all-to-all encode schedules.
+"""shard_map executors for the paper's all-to-all encode schedules — ONE
+generic :func:`ir_encode_jit` that runs any :class:`~repro.core.ir.ScheduleIR`.
 
-One processor per mesh-axis slot: an array of global shape ``(K, *payload)``
-is sharded ``P(axis)`` so device ``k`` holds packet ``x_k`` as a ``(1,
-*payload)`` block. Every ``jnp.roll(..., s, axis=0)`` of the single-host
-executors (core/prepare_shoot.py, core/draw_loose.py) becomes exactly one
-``jax.lax.ppermute`` with the uniform shift ``src → (src + s) % K`` — the
-round structure, coefficient tables and masks are consumed from the SAME
-compile-time plans (core/schedule.py), so the mesh path and the single-host
-oracle agree bit-for-bit by construction.
+One processor per mesh slot: an array of global shape ``(K, *payload)`` is
+sharded ``P(axes)`` so the device at flattened mesh index ``k`` holds packet
+``x_k`` as a ``(1, *payload)`` block. Each :class:`~repro.core.ir.CommRound`
+decomposes into its port groups (transfers sharing (port, slots, mode) — a
+uniform permutation), and every port group becomes exactly one
+``jax.lax.ppermute`` over the composite encode axes; each
+:class:`~repro.core.ir.LocalOp` becomes a Shoup-multiplied modular
+contraction against baked per-device coefficient constants. The per-family
+``*_encode_jit`` entry points are now dispatches: they build the plan,
+compile it with ``plan.to_ir()``, and hand the IR to the generic executor —
+the round structure, coefficient tables, and masks all come from the SAME
+compile-time plans as the host simulators, so the mesh path and the
+single-host oracle agree bit-for-bit by construction.
 
-Communication discipline (tested via compiled HLO): the universal encode
-lowers to ``collective-permute`` rounds only — C1 = Tp + Ts rounds with the
-paper's Θ(√K/p) per-port volumes — never to a K-sized ``all-gather``.
-:func:`allgather_encode_jit` is the deliberate baseline that DOES all-gather,
-kept for benchmarks and as the cost-model foil.
+Communication discipline (tested via compiled HLO): every IR round lowers to
+``collective-permute`` only — never to a K-sized ``all-gather``. The
+committed ppermute budgets (``expected_permute_count`` and friends) are
+unchanged by the IR refactor and asserted at dispatch time
+(``ir_permute_count(ir) ≤ budget``; equality in the non-degenerate regimes
+the jaxpr tests pin).
+
+:func:`allgather_encode_jit` is the deliberate baseline that DOES
+all-gather, kept for benchmarks and as the cost-model foil.
 
 All device arithmetic is the uint32-only tier of core/field.py (Shoup
 multiplies by compile-time coefficient duals), so the same bodies lower for
@@ -40,17 +50,23 @@ from jax.sharding import PartitionSpec as P
 
 from repro.dist._compat import shard_map as _smap
 from repro.core.field import M31, NTT, madd, shoup_mul, shoup_precompute
+from repro.core.ir import (
+    INPUT_SLOT,
+    CommRound,
+    LocalOp,
+    ScheduleIR,
+    ir_permute_count,
+    round_port_groups,
+)
 from repro.core.schedule import (
     PrepareShootPlan,
-    butterfly_group_perms,
-    coeff_mask,
     digit_reduction_slots,
     plan_butterfly,
     plan_prepare_shoot,
-    shoot_coeff_tensor,
 )
 
 __all__ = [
+    "ir_encode_jit",
     "ps_encode_jit",
     "allgather_encode_jit",
     "butterfly_jit",
@@ -68,10 +84,131 @@ def _bcast(coef, npay: int):
     return coef.reshape(coef.shape + (1,) * npay)
 
 
-def _shift_perm(K: int, s: int):
-    """ppermute pairs realizing ``jnp.roll(x, s, axis=0)`` on the processor
-    axis: receiver k gets the packet of k - s, i.e. src → (src + s) % K."""
-    return [(src, (src + s) % K) for src in range(K)]
+# ---------------------------------------------------------------------------
+# THE generic executor: any ScheduleIR whose rounds are mesh permutations
+# ---------------------------------------------------------------------------
+
+
+def ir_encode_jit(mesh, axes, ir: ScheduleIR, *, q: int = M31):
+    """Jitted mesh executor of any :class:`ScheduleIR`: device ``k`` (the
+    flattened index over ``axes``, outermost first — exactly how ``P(axes)``
+    shards the packet dimension) runs processor ``k``'s program.
+
+    Every port group of every round is one ``ppermute`` over the composite
+    ``axes`` (tuple axis names flatten row-major, matching the sharding);
+    receive coefficients and LocalOp contractions are baked per-device Shoup
+    constants sharded on their leading K dimension. ``mode="store"`` groups
+    must cover every device (a partial permutation would zero-fill the rest);
+    ``mode="add"`` groups may be partial — non-receivers add ppermute's
+    zeros, a no-op.
+
+    Inputs/outputs are in DEVICE order; for an IR with a non-identity
+    ``placement`` (e.g. after ``topo.passes.remap_digits``) the caller
+    permutes host-side: device ``placement[k]`` holds logical packet k.
+    """
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    K = 1
+    for ax in axes:
+        K *= int(mesh.shape[ax])
+    if K != ir.K:
+        raise ValueError(f"mesh axes {axes!r} give {K} devices, IR has {ir.K}")
+
+    consts: list[np.ndarray] = []  # all (K, ...) — sharded on dim 0
+
+    def bake(arr):
+        arr = np.asarray(arr, dtype=np.uint32)
+        consts.append(arr)
+        consts.append(shoup_precompute(arr, q))
+        return len(consts) - 2
+
+    ops = []  # ("comm", [(pairs, src_slots, dst_slots, mode, coef_idx)]) | ("local", ...)
+    for step in ir.steps:
+        if isinstance(step, CommRound):
+            groups = []
+            for g in round_port_groups(step):
+                if g.mode == "store" and len(g.pairs) != K:
+                    raise ValueError(
+                        "store-mode port group must cover every device "
+                        f"(got {len(g.pairs)} of {K})"
+                    )
+                coef_idx = None
+                if g.coeffs_by_dst is not None:
+                    coef = np.ones((K, len(g.slots)), dtype=np.uint32)
+                    for dst, cs in g.coeffs_by_dst.items():
+                        if cs is not None:
+                            coef[dst] = cs
+                    coef_idx = bake(coef)
+                groups.append(
+                    (
+                        g.pairs,
+                        tuple(ss for ss, _ in g.slots),
+                        tuple(ds for _, ds in g.slots),
+                        g.mode,
+                        coef_idx,
+                    )
+                )
+            if groups:
+                ops.append(("comm", groups))
+        elif isinstance(step, LocalOp):
+            if step.coeffs is None:
+                raise ValueError(
+                    "structure-only IR (LocalOp.coeffs=None) cannot execute — "
+                    "recompile with the generator matrix"
+                )
+            ops.append(
+                ("local", step.out_slots, step.in_slots, bake(step.coeffs))
+            )
+        else:  # pragma: no cover
+            raise TypeError(f"unknown IR step {type(step).__name__}")
+
+    def body(x, cs):
+        npay = x.ndim - 1
+        zero = jnp.zeros_like(x)
+        buf = {INPUT_SLOT: x}
+        for op in ops:
+            if op[0] == "comm":
+                updates = []
+                for pairs, src_slots, dst_slots, mode, coef_idx in op[1]:
+                    payload = jnp.stack(
+                        [buf.get(s, zero) for s in src_slots], axis=1
+                    )  # (1, n_slots, *pay)
+                    recv = jax.lax.ppermute(payload, axes, pairs)
+                    if coef_idx is not None:
+                        recv = shoup_mul(
+                            recv,
+                            _bcast(cs[coef_idx], npay),
+                            _bcast(cs[coef_idx + 1], npay),
+                            q,
+                        )
+                    for i, ds in enumerate(dst_slots):
+                        updates.append((ds, recv[:, i], mode))
+                for ds, v, mode in updates:  # sends all read pre-round state
+                    buf[ds] = v if mode == "store" else (
+                        madd(buf[ds], v, q) if ds in buf else v
+                    )
+            else:
+                _, out_slots, in_slots, coef_idx = op
+                c, csh = cs[coef_idx], cs[coef_idx + 1]  # (1, n_out, n_in)
+                new = {}
+                for i, os_ in enumerate(out_slots):
+                    acc = None
+                    for j, is_ in enumerate(in_slots):
+                        term = shoup_mul(
+                            buf.get(is_, zero),
+                            _bcast(c[:, i, j], npay),
+                            _bcast(csh[:, i, j], npay),
+                            q,
+                        )
+                        acc = term if acc is None else madd(acc, term, q)
+                    new[os_] = acc
+                buf = new
+        return buf[ir.out_slot]
+
+    mapped = _smap(
+        body, mesh, in_specs=(P(axes), P(axes)), out_specs=P(axes)
+    )
+    cs_dev = [jnp.asarray(a) for a in consts]
+    return jax.jit(lambda x: mapped(x, cs_dev))
 
 
 # ---------------------------------------------------------------------------
@@ -91,7 +228,8 @@ def shoot_round_slots(plan: PrepareShootPlan, t: int, rho: int):
 def expected_permute_count(plan: PrepareShootPlan) -> int:
     """Number of ppermute ops ps_encode_jit emits: p per prepare round plus
     one per non-empty (round, port) shoot slice — the plan/collective
-    agreement contract checked in tests/test_dist_unit.py."""
+    agreement contract checked in tests/test_dist_unit.py. (The IR path
+    emits exactly this in the regular m ≤ K regime and never more.)"""
     count = plan.Tp * plan.p
     for t in range(1, plan.Ts + 1):
         for rho in range(1, plan.p + 1):
@@ -101,13 +239,21 @@ def expected_permute_count(plan: PrepareShootPlan) -> int:
     return count
 
 
+def _check_budget(ir: ScheduleIR, budget: int):
+    n = ir_permute_count(ir)
+    if n > budget:
+        raise AssertionError(
+            f"{ir.algorithm} IR needs {n} ppermutes, committed budget is {budget}"
+        )
+
+
 def ps_encode_jit(mesh, axis: str, A: np.ndarray, *, p: int = 1, q: int = M31):
     """Jitted mesh executor of the universal encode: ``out = x @ A`` over
     GF(q) for ANY K×K matrix A, K = mesh.shape[axis].
 
     Returns ``(fn, plan)``; ``fn`` maps a ``(K, *payload)`` uint32 array
     (sharded or shardable over ``axis``) to the encoded array of the same
-    shape. A is a host array: the shoot coefficients and their Shoup duals
+    shape. A is a host array: the IR's coefficients and their Shoup duals
     are baked in as per-device compile-time constants.
     """
     K = int(mesh.shape[axis])
@@ -115,63 +261,17 @@ def ps_encode_jit(mesh, axis: str, A: np.ndarray, *, p: int = 1, q: int = M31):
     if A.shape != (K, K):
         raise ValueError(f"A must be ({K}, {K}) to match mesh axis {axis!r}, got {A.shape}")
     plan = plan_prepare_shoot(K, p)
-    radix = p + 1
-    m, n = plan.m, plan.n
-    mask = coeff_mask(plan)  # (m, n) bool, first-coverage exactness
-    coef = (shoot_coeff_tensor(plan, A) * mask[None, :, :]).astype(np.uint32)  # (K, m, n)
-    coef_shoup = shoup_precompute(coef, q)
-
-    def body(x, cf, cfs):
-        # x: (1, *payload) — this device's packet; cf/cfs: (1, m, n)
-        npay = x.ndim - 1
-        # ---- prepare phase: Tp rounds, message = whole buffer (Lemma 3) ---
-        buf = x[:, None]  # (1, 1, *payload)
-        for shifts in plan.prepare_shifts:
-            parts = [buf]
-            for s in shifts:
-                parts.append(jax.lax.ppermute(buf, axis, _shift_perm(K, s % K)))
-            buf = jnp.concatenate(parts, axis=1)
-        # ---- w-init: modular contraction with baked Shoup coefficients ----
-        cols = []
-        for l in range(n):
-            acc = None
-            for u in range(m):
-                term = shoup_mul(
-                    buf[:, u], _bcast(cf[:, u, l], npay), _bcast(cfs[:, u, l], npay), q
-                )
-                acc = term if acc is None else madd(acc, term, q)
-            cols.append(acc)
-        w = jnp.stack(cols, axis=1)  # (1, n, *payload)
-        # ---- shoot phase: Ts rounds, digit-t slices only -----------------
-        for t, shifts in enumerate(plan.shoot_shifts, start=1):
-            acc = w
-            for rho, s in enumerate(shifts, start=1):
-                dst, src = shoot_round_slots(plan, t, rho)
-                if dst.size == 0:
-                    continue
-                payload = jnp.take(w, jnp.asarray(src), axis=1)
-                payload = jax.lax.ppermute(payload, axis, _shift_perm(K, s % K))
-                # scatter the received slices into their target slots
-                pos = np.full(n, dst.size, dtype=np.int64)
-                pos[dst] = np.arange(dst.size)
-                padded = jnp.concatenate(
-                    [payload, jnp.zeros_like(w[:, :1])], axis=1
-                )
-                acc = madd(acc, jnp.take(padded, jnp.asarray(pos), axis=1), q)
-            w = acc
-        return w[:, 0]
-
-    mapped = _smap(body, mesh, in_specs=(P(axis), P(axis), P(axis)), out_specs=P(axis))
-    cf_dev = jnp.asarray(coef)
-    cfs_dev = jnp.asarray(coef_shoup)
-    fn = jax.jit(lambda x: mapped(x, cf_dev, cfs_dev))
-    return fn, plan
+    ir = plan.to_ir(A, q=q)
+    _check_budget(ir, expected_permute_count(plan))
+    return ir_encode_jit(mesh, axis, ir, q=q), plan
 
 
 def allgather_encode_jit(mesh, axis: str, A: np.ndarray, *, q: int = M31):
     """Baseline mesh encode: all-gather every packet, then each device
     contracts locally with its own column of A — C1 = O(log K) but
-    C2 = Θ(K/p). Kept as the benchmark/cost-model foil for ps_encode_jit."""
+    C2 = Θ(K/p). Kept as the benchmark/cost-model foil for ps_encode_jit
+    (deliberately NOT routed through ir_encode_jit: its point is the
+    all-gather the IR path never emits)."""
     K = int(mesh.shape[axis])
     A = np.asarray(A)
     if A.shape != (K, K):
@@ -197,7 +297,7 @@ def allgather_encode_jit(mesh, axis: str, A: np.ndarray, *, q: int = M31):
 
 
 # ---------------------------------------------------------------------------
-# two-level hierarchical encode (repro.topo.hierarchical) on a 2D mesh
+# two-level hierarchical encode on a 2D mesh
 # ---------------------------------------------------------------------------
 
 
@@ -231,14 +331,16 @@ def hierarchical_encode_jit(
     Three phases (repro.topo.hierarchical — the topology-aligned schedule):
     (p+1)-ary doubling all-gather over the fast ``intra_axis``, a local Shoup
     contraction against baked per-device coefficients, then the §IV
-    digit-reduction shoot over the slow ``inter_axis``. Every round is
-    ppermutes on exactly one mesh axis, so intra traffic never crosses the
-    slow domain. Bit-exact vs. the single-level ``ps_encode_jit`` /
-    ``encode_oracle`` (modular sums reassociate exactly).
+    digit-reduction shoot over the slow ``inter_axis``. Every port group is
+    one ppermute, so intra traffic never crosses the slow domain. Bit-exact
+    vs. the single-level ``ps_encode_jit`` / ``encode_oracle`` (modular sums
+    reassociate exactly).
 
     The two-level schedule is exactly the depth-2 case of the recursive one
     (``plan_multilevel(K, p, (I, G))`` lowers to the same rounds — asserted
-    in tests), so the executor delegates to :func:`multilevel_encode_jit`.
+    in tests), so ``HierarchicalPlan.to_ir`` compiles through the multilevel
+    IR builder and this dispatch shares :func:`ir_encode_jit` with
+    everything else.
 
     Returns ``(fn, plan)`` with plan a :class:`HierarchicalPlan`.
     """
@@ -253,12 +355,14 @@ def hierarchical_encode_jit(
             f"A must be ({K}, {K}) to match mesh axes "
             f"({inter_axis!r}×{intra_axis!r}), got {A.shape}"
         )
-    fn, _ = multilevel_encode_jit(mesh, (inter_axis, intra_axis), A, p=p, q=q)
-    return fn, plan_hierarchical(K, p, k_intra=I)
+    plan = plan_hierarchical(K, p, k_intra=I)
+    ir = plan.to_ir(A, q=q)
+    _check_budget(ir, expected_hier_permute_count(plan))
+    return ir_encode_jit(mesh, (inter_axis, intra_axis), ir, q=q), plan
 
 
 # ---------------------------------------------------------------------------
-# recursive multi-level encode (repro.topo.hierarchical) on an N-D mesh
+# recursive multi-level encode on an N-D mesh
 # ---------------------------------------------------------------------------
 
 
@@ -290,18 +394,15 @@ def multilevel_encode_jit(mesh, axes, A: np.ndarray, *, p: int = 1, q: int = M31
     schedule): (p+1)-ary doubling all-gather over the innermost axis, a
     local Shoup contraction against baked per-device coefficients, then one
     §IV digit-reduction shoot per outer axis, innermost first — every round
-    is ppermutes on exactly ONE mesh axis, so traffic never rides a slower
+    permutes exactly ONE level's coordinate, so traffic never rides a slower
     level than its phase. Bit-exact vs. ``ps_encode_jit`` / ``encode_oracle``
     (modular sums reassociate exactly). With two axes this is exactly
-    ``hierarchical_encode_jit``'s schedule.
+    ``hierarchical_encode_jit``'s schedule; both are
+    ``ir_encode_jit(mesh, axes, plan.to_ir(A))`` dispatches.
 
     Returns ``(fn, plan)`` with plan a :class:`MultiLevelPlan`.
     """
-    from repro.topo.hierarchical import (
-        multilevel_coeff_tensor,
-        multilevel_level_slots,
-        plan_multilevel,
-    )
+    from repro.topo.hierarchical import plan_multilevel
 
     axes = tuple(axes)
     sizes = [int(mesh.shape[ax]) for ax in axes]
@@ -315,65 +416,9 @@ def multilevel_encode_jit(mesh, axes, A: np.ndarray, *, p: int = 1, q: int = M31
             f"A must be ({K}, {K}) to match mesh axes {axes!r}, got {A.shape}"
         )
     plan = plan_multilevel(K, p, levels)
-    K0, n = plan.levels[0], plan.n_slots
-    coef = multilevel_coeff_tensor(plan, A).astype(np.uint32)  # (K, K0, n)
-    coef_shoup = shoup_precompute(coef, q)
-    intra_axis = axes[-1]
-    # outer level j (1-based, innermost outer first) lives on mesh axis -1-j
-    level_axis = {j: axes[-1 - j] for j in range(1, len(levels))}
-
-    def body(x, cf, cfs):
-        # x: (1, *payload) — this device's packet; cf/cfs: (1, K0, n)
-        npay = x.ndim - 1
-        # ---- intra gather over the innermost axis -------------------------
-        buf = x[:, None]
-        for ports in plan.intra_rounds:
-            parts = [buf]
-            for s, cnt in ports:
-                parts.append(
-                    jax.lax.ppermute(buf[:, :cnt], intra_axis, _shift_perm(K0, s))
-                )
-            buf = jnp.concatenate(parts, axis=1)
-        # ---- local contraction into the per-level offset slots ------------
-        cols = []
-        for l in range(n):
-            acc = None
-            for u in range(K0):
-                term = shoup_mul(
-                    buf[:, u], _bcast(cf[:, u, l], npay), _bcast(cfs[:, u, l], npay), q
-                )
-                acc = term if acc is None else madd(acc, term, q)
-            cols.append(acc)
-        z = jnp.stack(cols, axis=1)  # (1, n, *payload)
-        # ---- per-level shoot, innermost outer level first -----------------
-        for j in range(1, len(plan.levels)):
-            kj = plan.levels[j]
-            for t, shifts in enumerate(plan.level_shifts[j - 1], start=1):
-                acc = z
-                for rho, s in enumerate(shifts, start=1):
-                    dst, src = multilevel_level_slots(plan, j, t, rho)
-                    if dst.size == 0:
-                        continue
-                    payload = jnp.take(z, jnp.asarray(src), axis=1)
-                    payload = jax.lax.ppermute(
-                        payload, level_axis[j], _shift_perm(kj, s % kj)
-                    )
-                    pos = np.full(n, dst.size, dtype=np.int64)
-                    pos[dst] = np.arange(dst.size)
-                    padded = jnp.concatenate(
-                        [payload, jnp.zeros_like(z[:, :1])], axis=1
-                    )
-                    acc = madd(acc, jnp.take(padded, jnp.asarray(pos), axis=1), q)
-                z = acc
-        return z[:, 0]
-
-    mapped = _smap(
-        body, mesh, in_specs=(P(axes), P(axes), P(axes)), out_specs=P(axes)
-    )
-    cf_dev = jnp.asarray(coef)
-    cfs_dev = jnp.asarray(coef_shoup)
-    fn = jax.jit(lambda x: mapped(x, cf_dev, cfs_dev))
-    return fn, plan
+    ir = plan.to_ir(A, q=q)
+    _check_budget(ir, expected_multilevel_permute_count(plan))
+    return ir_encode_jit(mesh, axes, ir, q=q), plan
 
 
 # ---------------------------------------------------------------------------
@@ -387,59 +432,13 @@ def butterfly_jit(
     """Jitted mesh butterfly: forward computes ``x @ butterfly_target_matrix``
     (the digit-reversed K-point DFT), inverse undoes it exactly (Lemma 5).
 
-    Returns ``(fn, plan)``. Round t exchanges within digit-t groups via
-    radix-1 ppermutes and combines with the plan's (inverse) twiddles —
-    C1 = C2 = H rounds/elements, mirroring core/draw_loose.butterfly_apply.
+    Returns ``(fn, plan)``. Round t exchanges within digit-t groups via p
+    radix-1 ppermutes (one per port group of the butterfly IR) and combines
+    with the plan's (inverse) twiddles — C1 = C2 = H rounds/elements,
+    mirroring core/draw_loose.butterfly_apply.
     """
     K = int(mesh.shape[axis])
     plan = plan_butterfly(K, p, q)
-    radix = plan.radix
-    k = np.arange(K)
-    order = range(plan.H - 1, -1, -1) if inverse else range(plan.H)
-    rounds = []
-    for t in order:
-        tw = plan.inv_twiddles[t] if inverse else plan.twiddles[t]
-        tw_sh = plan.inv_twiddles_shoup[t] if inverse else plan.twiddles_shoup[t]
-        step = radix**t
-        digit = (k // step) % radix
-        perms = butterfly_group_perms(K, radix, t)  # dst arrays for d=1..radix-1
-        # delta d: received value came from the group member with digit_t =
-        # (digit_k - d) % radix; pick that sender's coefficient column.
-        coefs, coefs_sh = [], []
-        for d in range(radix):
-            rho = (digit - d) % radix
-            coefs.append(tw[k, rho].astype(np.uint32))
-            coefs_sh.append(tw_sh[k, rho].astype(np.uint32))
-        perm_pairs = [
-            [(src, int(dst[src])) for src in range(K)] for dst in perms
-        ]
-        rounds.append((perm_pairs, np.stack(coefs), np.stack(coefs_sh)))
-
-    # coefficient tensor: (H, radix, K) → shard on the K dim
-    cf = np.stack([r[1] for r in rounds])
-    cf_sh = np.stack([r[2] for r in rounds])
-
-    def body(v, c, cs):
-        # v: (1, *payload); c/cs: (H, radix, 1)
-        npay = v.ndim - 1
-        for r_i, (perm_pairs, _, _) in enumerate(rounds):
-            acc = shoup_mul(
-                v, _bcast(c[r_i, 0], npay), _bcast(cs[r_i, 0], npay), q
-            )
-            for d in range(1, radix):
-                recv = jax.lax.ppermute(v, axis, perm_pairs[d - 1])
-                term = shoup_mul(
-                    recv, _bcast(c[r_i, d], npay), _bcast(cs[r_i, d], npay), q
-                )
-                acc = madd(acc, term, q)
-            v = acc
-        return v
-
-    mapped = _smap(
-        body, mesh, in_specs=(P(axis), P(None, None, axis), P(None, None, axis)),
-        out_specs=P(axis),
-    )
-    c_dev = jnp.asarray(cf)
-    cs_dev = jnp.asarray(cf_sh)
-    fn = jax.jit(lambda x: mapped(x, c_dev, cs_dev))
-    return fn, plan
+    ir = plan.to_ir(inverse=inverse)
+    _check_budget(ir, plan.H * p)
+    return ir_encode_jit(mesh, axis, ir, q=q), plan

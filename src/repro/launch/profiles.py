@@ -112,7 +112,11 @@ class EncodeProfile:
     allgather}; ``plan`` is the matching compile-time schedule plan (None for
     the plan-less allgather); ``levels`` the innermost-first hierarchy the
     choice was priced on — also the level sizes ``multilevel_encode_jit``
-    expects its mesh axes (reversed) to have."""
+    expects its mesh axes (reversed) to have. The selection is made over
+    priced ScheduleIRs (the autotuner enumerates ``plan.to_ir()`` compiles);
+    ``ir`` is the chosen candidate's compiled schedule — the exact object
+    ``dist.collectives.ir_encode_jit`` executes (structure-only here: the
+    executors recompile with the generator matrix at dispatch)."""
 
     topology: object  # repro.topo Topology the choice was priced on
     algorithm: str
@@ -122,6 +126,10 @@ class EncodeProfile:
     @property
     def levels(self) -> tuple[int, ...]:
         return getattr(self.topology, "levels", (self.topology.n,))
+
+    @property
+    def ir(self):
+        return self.tune.chosen.ir
 
 
 def resolve_profile(

@@ -4,31 +4,39 @@
 # - model.py         declarative topologies (flat, ring, torus, two-level,
 #                    recursive hierarchy) + α-β time estimation of arbitrary
 #                    round schedules
-# - lower.py         plan → explicit per-round message maps, hop counts,
-#                    link contention (cross-checked vs. the exact simulator)
+# - lower.py         ScheduleIR → explicit per-round message maps, hop
+#                    counts, link contention (cross-checked vs. the exact
+#                    interpreter); every plan lowers through plan.to_ir()
 # - hierarchical.py  two-level prepare-and-shoot, recursive multi-level
-#                    encode (K = Π K_j), Cooley–Tukey two-level DFT,
-#                    ring-optimized schedule + their exact simulators
-# - autotune.py      per-(K, p, payload, topology) algorithm selection with
-#                    a measured-override calibration hook
+#                    encode (K = Π K_j), Cooley–Tukey two-level AND
+#                    multi-level DFT, ring-optimized schedule — all compiled
+#                    to ScheduleIR and simulated by core.simulator.interpret
+# - passes.py        topology-aware IR rewrites (remap_digits: torus-native
+#                    butterfly via per-dimension Gray relabeling)
+# - calibrate.py     least-squares per-level α/β from measured sweeps
+# - autotune.py      per-(K, p, payload, topology) selection by enumerating
+#                    and pricing ScheduleIRs, with a measured-override hook
 #
-# The mesh executors for the hierarchical schedules live in
-# dist/collectives.hierarchical_encode_jit (2D) and
-# dist/collectives.multilevel_encode_jit (N-D) — dist lowers plans, as always.
+# The ONE mesh executor for any IR is dist/collectives.ir_encode_jit; the
+# per-algorithm *_encode_jit entry points dispatch through it.
 
 from .autotune import Candidate, TuneResult, autotune, candidates_for  # noqa: F401
+from .calibrate import fit_level_costs, round_features  # noqa: F401
 from .hierarchical import (  # noqa: F401
     HierarchicalPlan,
+    MultiLevelDFTPlan,
     MultiLevelPlan,
     RingPlan,
     TwoLevelDFTPlan,
     hierarchical_coeff_tensor,
     multilevel_coeff_tensor,
+    multilevel_dft_matrix,
     multilevel_level_slots,
     multilevel_live_mask,
     multilevel_message_size,
     plan_hierarchical,
     plan_multilevel,
+    plan_multilevel_dft,
     plan_ring,
     plan_two_level_dft,
     simulate_hierarchical,
@@ -37,7 +45,7 @@ from .hierarchical import (  # noqa: F401
     simulate_two_level_dft,
     two_level_dft_matrix,
 )
-from .lower import LoweredSchedule, lower, lower_allgather  # noqa: F401
+from .lower import LoweredSchedule, lower, lower_allgather, lower_ir  # noqa: F401
 from .model import (  # noqa: F401
     DCI,
     ICI,
@@ -54,3 +62,4 @@ from .model import (  # noqa: F401
     make_topology,
     schedule_time,
 )
+from .passes import max_round_hops, remap_digits  # noqa: F401

@@ -1,27 +1,35 @@
 """Algorithm autotuner: pick the fastest encode schedule for a scenario.
 
-Given (K, p, payload bytes, topology, generator kind) the tuner builds every
-applicable plan — prepare-shoot, draw-loose, butterfly, all-gather, ring, and
-the two hierarchical schedules — lowers each onto the topology, prices it
-with the α-β estimator, and returns the cheapest. Related work shows the
-winner genuinely flips with topology (ring networks favor neighbor-only
-schedules; two-level meshes favor level-aligned ones), which is exactly what
-the estimator captures through per-link contention.
+Given (K, p, payload bytes, topology, generator kind) the tuner **enumerates
+ScheduleIRs**: every applicable plan is compiled with ``plan.to_ir()``,
+cleaned by ``fuse_trivial_rounds``, optionally rewritten by topology-aware
+passes (``remap_digits`` on a 2D torus), and priced on the topology through
+its IR message maps with the α-β estimator. The cheapest wins. Because
+candidates are IRs rather than hand-registered callables, a new algorithm
+participates the moment its plan compiles — no per-family lowering or
+simulator registration. Related work shows the winner genuinely flips with
+topology (ring networks favor neighbor-only schedules; two-level meshes
+favor level-aligned ones), which is exactly what the estimator captures
+through per-link contention.
 
 Applicability matrix (the "universal promise" vs. structured generators):
 
 * ``general``      — prepare-shoot, hierarchical, multilevel, allgather, ring
 * ``vandermonde``  — the above + draw-loose
-* ``dft``          — all of the above + butterfly + hierarchical-dft
+* ``dft``          — all of the above + butterfly (+ its torus-remapped
+  variant) + two-level and multi-level DFT
 
-The ``multilevel`` candidate appears when the topology is a
-:class:`~repro.topo.model.Hierarchy` whose level product matches K: the plan
-factorization is taken from the topology itself, so the schedule's phases
-align with the hardware's levels by construction.
+The ``multilevel`` / ``multilevel-dft`` candidates appear when the topology
+is a :class:`~repro.topo.model.Hierarchy` whose level product matches K: the
+plan factorization is taken from the topology itself, so the schedule's
+phases align with the hardware's levels by construction. The
+``butterfly-remap`` candidate appears on a :class:`Torus2D`: the
+``topo.passes.remap_digits`` rewrite whose partners are torus neighbors.
 
 A ``measured`` override hook replaces predicted times with wall-clock
 numbers (e.g. from benchmarks/bench_topology.py) without changing the
-selection logic — the calibration path the ROADMAP's follow-on names.
+selection logic; ``topo.calibrate.fit_level_costs`` turns the same sweeps
+into fitted per-level α/β.
 
 Paper-notation glossary: ``K`` processors, ``p`` ports, ``C1`` rounds,
 ``C2`` per-port elements (paper §I); ``I``/``G`` the two-level k_intra ×
@@ -34,24 +42,29 @@ from __future__ import annotations
 from dataclasses import dataclass, replace
 
 from repro.core.field import M31
+from repro.core.ir import ScheduleIR, fuse_trivial_rounds, ir_allgather
 from repro.core.schedule import plan_butterfly, plan_draw_loose, plan_prepare_shoot
 
 from .hierarchical import (
     plan_hierarchical,
     plan_multilevel,
+    plan_multilevel_dft,
     plan_ring,
     plan_two_level_dft,
 )
-from .lower import LoweredSchedule, lower, lower_allgather
-from .model import Hierarchy, TimeEstimate, Topology, TwoLevel
+from .lower import LoweredSchedule, lower_ir
+from .model import Hierarchy, TimeEstimate, Topology, Torus2D, TwoLevel
 
 GENERATOR_KINDS = ("general", "vandermonde", "dft")
 
 # deterministic tie-break: structured algorithms first (they generalize
-# less), flat-canonical schedules before their two-level equivalents
+# less), flat-canonical schedules before their topology-rewritten or
+# multi-level equivalents
 _PREFERENCE = (
     "butterfly",
+    "butterfly-remap",
     "hierarchical-dft",
+    "multilevel-dft",
     "draw-loose",
     "prepare-shoot",
     "hierarchical",
@@ -65,6 +78,7 @@ _PREFERENCE = (
 class Candidate:
     algorithm: str
     plan: object  # schedule plan (None for the plan-less allgather baseline)
+    ir: ScheduleIR  # the compiled (and pass-rewritten) schedule
     lowered: LoweredSchedule
     estimate: TimeEstimate
     measured_time: float | None = None
@@ -110,7 +124,7 @@ def _split_for(topo: Topology, K: int) -> int:
 
 
 def _levels_for(topo: Topology, K: int) -> tuple[int, ...] | None:
-    """Factorization for the multi-level candidate: the Hierarchy's own
+    """Factorization for the multi-level candidates: the Hierarchy's own
     levels when they multiply to K and at least two are non-trivial."""
     if isinstance(topo, Hierarchy) and topo.n == K:
         if sum(1 for k in topo.levels if k > 1) >= 2:
@@ -131,18 +145,22 @@ def candidates_for(
     if generator not in GENERATOR_KINDS:
         raise ValueError(f"generator must be one of {GENERATOR_KINDS}")
 
-    def cand(plan, lowered=None):
-        low = lowered if lowered is not None else lower(plan)
+    def cand(plan, ir=None, algorithm=None):
+        ir = fuse_trivial_rounds(ir if ir is not None else plan.to_ir())
+        if algorithm is not None:
+            ir = replace(ir, algorithm=algorithm)
+        low = lower_ir(ir)
         return Candidate(
             algorithm=low.algorithm,
             plan=plan,
+            ir=ir,
             lowered=low,
             estimate=low.time(topo, payload_elems),
         )
 
     out = [
         cand(plan_prepare_shoot(K, p)),
-        cand(None, lowered=lower_allgather(K, p)),
+        cand(None, ir=ir_allgather(K, p)),
         cand(plan_ring(K, p)),
     ]
     k_intra = _split_for(topo, K)
@@ -157,10 +175,25 @@ def candidates_for(
         except (ValueError, RuntimeError):
             pass  # field too small / no valid phi — not applicable
     if generator == "dft":
+        bf = None
         try:
-            out.append(cand(plan_butterfly(K, p, q)))
+            bf = plan_butterfly(K, p, q)
+            out.append(cand(bf))
         except ValueError:
             pass  # K not a power of p+1 or K ∤ q-1
+        if bf is not None and isinstance(topo, Torus2D) and topo.n == K:
+            try:
+                from .passes import remap_digits
+
+                out.append(
+                    cand(
+                        bf,
+                        ir=remap_digits(bf.to_ir(), topo),
+                        algorithm="butterfly-remap",
+                    )
+                )
+            except ValueError:
+                pass  # torus dims not powers of the radix
         for ki in dict.fromkeys((k_intra, _dft_split(K, p))):
             if ki is None or not (1 < ki < K):
                 continue
@@ -169,6 +202,11 @@ def candidates_for(
                 break
             except ValueError:
                 continue
+        if levels is not None:
+            try:
+                out.append(cand(plan_multilevel_dft(K, p, q, levels)))
+            except ValueError:
+                pass  # levels not powers of p+1 or K ∤ q-1
     return out
 
 

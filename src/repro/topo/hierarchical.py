@@ -77,43 +77,19 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core.bounds import ceil_log
-from repro.core.field import Field
+from repro.core.field import M31, Field
 from repro.core.matrices import digit_reversal_permutation
 from repro.core.schedule import (
-    butterfly_group_perms,
     digit_reduction_message_size,
     digit_reduction_slots,
+    gather_rounds,  # noqa: F401  (re-export; the IR compilers share it)
     plan_butterfly,
 )
-from repro.core.simulator import SimStats, SyncSimulator
+from repro.core.simulator import SimStats, interpret
 
 
-# ---------------------------------------------------------------------------
-# (p+1)-ary doubling all-gather rounds (shared by the intra phase and the
-# flat all-gather baseline lowering)
-# ---------------------------------------------------------------------------
-
-
-def gather_rounds(N: int, p: int) -> tuple[tuple[tuple[int, int], ...], ...]:
-    """Round schedule fully gathering N cyclic packets: each round every
-    processor sends a prefix of its (contiguous-offset) buffer to p partners.
-
-    Returns per round a tuple of ``(shift, count)`` ports: send buffer slots
-    [0, count) to processor k+shift (mod N). After round r the buffer holds
-    offsets [0, min((p+1)^r, N)) — ⌈log_{p+1}N⌉ rounds total, C2 = Σ max
-    count ≈ (N−1)/p (the optimal p-port all-gather of bounds.py).
-    """
-    rounds = []
-    b = 1
-    while b < N:
-        ports = []
-        for rho in range(1, p + 1):
-            cnt = min(b, N - rho * b)
-            if cnt > 0:
-                ports.append((rho * b, cnt))
-        rounds.append(tuple(ports))
-        b = min(b * (p + 1), N)
-    return tuple(rounds)
+# (p+1)-ary doubling all-gather rounds now live in core.schedule (the IR
+# compilers in core/ir.py share them); re-exported here for compatibility.
 
 
 # ---------------------------------------------------------------------------
@@ -149,6 +125,15 @@ class HierarchicalPlan:
     @property
     def algorithm(self) -> str:
         return "hierarchical"
+
+    def to_ir(self, A=None, *, q: int = M31):
+        """The two-level schedule is exactly the depth-2 case of the
+        recursive one (asserted round-for-round in tests), so it compiles
+        through the same multilevel IR builder."""
+        from dataclasses import replace
+
+        ml = plan_multilevel(self.K, self.p, (self.k_intra, self.k_inter))
+        return replace(ml.to_ir(A, q=q), algorithm="hierarchical")
 
 
 def plan_hierarchical(K: int, p: int, k_intra: int) -> HierarchicalPlan:
@@ -204,70 +189,11 @@ def hierarchical_coeff_tensor(plan: HierarchicalPlan, A: np.ndarray) -> np.ndarr
 def simulate_hierarchical(
     x: np.ndarray, A: np.ndarray, plan: HierarchicalPlan, field: Field
 ) -> tuple[np.ndarray, SimStats]:
-    """Message-passing execution under the p-port constraints; bit-exact
-    ``x @ A`` for ANY matrix A. Returns (x̃, stats)."""
-    K, p, I, G = plan.K, plan.p, plan.k_intra, plan.k_inter
-    sim = SyncSimulator(K, p)
-    x = field.asarray(x)
-    A = field.asarray(A)
-
-    # ---- intra gather: storage[k][u] = x_{g, (i-u) % I} -------------------
-    storage: list[list] = [[x[k]] for k in range(K)]
-    for ports in plan.intra_rounds:
-        msgs = {}
-        for k in range(K):
-            g, i = divmod(k, I)
-            for s, cnt in ports:
-                dst = g * I + (i + s) % I
-                msgs[(k, dst)] = storage[k][:cnt]
-        delivered = sim.exchange(msgs)
-        new = [list(st) for st in storage]
-        for k in range(K):
-            g, i = divmod(k, I)
-            for s, cnt in ports:  # append in port order → contiguous offsets
-                src = g * I + (i - s) % I
-                new[k].extend(delivered[(src, k)])
-        storage = new
-    for k in range(K):
-        assert len(storage[k]) == I, "intra gather must cover the group"
-
-    # ---- local contraction: z[l] = partial sum for group (g+l) % G --------
-    w = np.zeros((K, plan.n_inter), dtype=np.uint64)
-    for k in range(K):
-        g, i = divmod(k, I)
-        for l in range(G):
-            col = ((g + l) % G) * I + i
-            acc = np.uint64(0)
-            for u in range(I):
-                r = g * I + (i - u) % I
-                acc = field.add(acc, field.mul(storage[k][u], A[r, col]))
-            w[k, l] = acc
-
-    # ---- inter shoot: digit-reduce the group offset toward slot 0 ---------
-    radix = p + 1
-    for t, shifts in enumerate(plan.inter_shifts, start=1):
-        stride = radix ** (t - 1)
-        msgs = {}
-        for k in range(K):
-            g, i = divmod(k, I)
-            for rho, s in enumerate(shifts, start=1):
-                ls = [
-                    l
-                    for l in range(plan.n_inter)
-                    if (l // stride) % radix == rho and l % stride == 0 and l < G
-                ]
-                if ls:
-                    dst = ((g + s) % G) * I + i
-                    msgs[(k, dst)] = [(l, w[k, l]) for l in ls]
-        delivered = sim.exchange(msgs)
-        for (src, dst), items in delivered.items():
-            for l, val in items:
-                w[dst, l - ((l // stride) % radix) * stride] = field.add(
-                    w[dst, l - ((l // stride) % radix) * stride], val
-                )
-
-    out = np.array([w[k, 0] for k in range(K)], dtype=np.uint64)
-    return out, sim.stats
+    """Message-passing execution under the p-port constraints (generic IR
+    interpreter); bit-exact ``x @ A`` for ANY matrix A. Returns (x̃, stats)."""
+    out, stats = interpret(plan.to_ir(A, q=field.q), x, field)
+    np.testing.assert_array_equal(out, field.matmul(field.asarray(x), A))
+    return out, stats
 
 
 # ---------------------------------------------------------------------------
@@ -309,6 +235,9 @@ class MultiLevelPlan:
     @property
     def algorithm(self) -> str:
         return "multilevel"
+
+    def to_ir(self, A=None, *, q: int = M31):
+        return _multilevel_ir(self, A, q=q)
 
 
 def plan_multilevel(K: int, p: int, levels) -> MultiLevelPlan:
@@ -438,68 +367,70 @@ def multilevel_coeff_tensor(plan: MultiLevelPlan, A: np.ndarray) -> np.ndarray:
     return coef * multilevel_live_mask(plan)[None, None, :]
 
 
+def _multilevel_ir(plan: MultiLevelPlan, A=None, *, q: int = M31):
+    """Compile the recursive schedule to ScheduleIR: level-0 doubling gather
+    (store mode, contiguous offsets), one LocalOp contraction into the
+    per-level offset slots (live-masked coefficients), then one §IV
+    digit-reduction CommRound per (outer level, round), innermost first."""
+    from repro.core.ir import CommRound, LocalOp, ScheduleIR, Transfer
+
+    K, p, K0 = plan.K, plan.p, plan.levels[0]
+    steps: list = []
+    for ports in plan.intra_rounds:
+        transfers = []
+        for rho, (s, cnt) in enumerate(ports, start=1):
+            for k in range(K):
+                g, i = divmod(k, K0)
+                transfers.append(
+                    Transfer(
+                        src=k,
+                        dst=g * K0 + (i + s) % K0,
+                        port=rho,
+                        slots=tuple((u, s + u) for u in range(cnt)),
+                        mode="store",
+                    )
+                )
+        steps.append(CommRound(tuple(transfers)))
+    coeffs = None
+    if A is not None:
+        coef = multilevel_coeff_tensor(plan, Field(q).asarray(A))  # (K, K0, n)
+        coeffs = np.ascontiguousarray(np.swapaxes(coef, 1, 2))  # (K, n, K0)
+    steps.append(
+        LocalOp(tuple(range(plan.n_slots)), tuple(range(K0)), coeffs)
+    )
+    for j in range(1, len(plan.levels)):
+        for t, shifts in enumerate(plan.level_shifts[j - 1], start=1):
+            transfers = []
+            for rho, s in enumerate(shifts, start=1):
+                dst_slots, src_slots = multilevel_level_slots(plan, j, t, rho)
+                if src_slots.size == 0:
+                    continue
+                slots = tuple(
+                    (int(ls), int(ld)) for ld, ls in zip(dst_slots, src_slots)
+                )
+                for k in range(K):
+                    transfers.append(
+                        Transfer(
+                            src=k,
+                            dst=multilevel_dev_shift(plan, k, j, s),
+                            port=rho,
+                            slots=slots,
+                            mode="add",
+                        )
+                    )
+            steps.append(CommRound(tuple(transfers)))
+    return ScheduleIR("multilevel", K, p, tuple(steps))
+
+
 def simulate_multilevel(
     x: np.ndarray, A: np.ndarray, plan: MultiLevelPlan, field: Field
 ) -> tuple[np.ndarray, SimStats]:
     """Message-passing execution of the recursive schedule under the p-port
-    constraints; bit-exact ``x @ A`` for ANY matrix A and ANY factorization.
-    Returns (x̃, stats)."""
-    K, p, K0 = plan.K, plan.p, plan.levels[0]
-    sim = SyncSimulator(K, p)
-    x = field.asarray(x)
-    A = field.asarray(A)
-
-    # ---- intra gather over level 0: storage[k][u] = x at (i-u) % K0 -------
-    storage: list[list] = [[x[k]] for k in range(K)]
-    for ports in plan.intra_rounds:
-        msgs = {}
-        for k in range(K):
-            g, i = divmod(k, K0)
-            for s, cnt in ports:
-                msgs[(k, g * K0 + (i + s) % K0)] = storage[k][:cnt]
-        delivered = sim.exchange(msgs)
-        new = [list(st) for st in storage]
-        for k in range(K):
-            g, i = divmod(k, K0)
-            for s, cnt in ports:
-                src = g * K0 + (i - s) % K0
-                new[k].extend(delivered[(src, k)])
-        storage = new
-    for k in range(K):
-        assert len(storage[k]) == K0, "intra gather must cover the level-0 domain"
-
-    # ---- local contraction into the per-level offset slots ----------------
-    coef = multilevel_coeff_tensor(plan, A)
-    w = np.zeros((K, plan.n_slots), dtype=np.uint64)
-    live = multilevel_live_mask(plan)
-    for k in range(K):
-        for l in np.nonzero(live)[0]:
-            acc = np.uint64(0)
-            for u in range(K0):
-                acc = field.add(acc, field.mul(storage[k][u], coef[k, u, l]))
-            w[k, int(l)] = acc
-
-    # ---- per-level digit-reduction shoot, innermost outer level first -----
-    for j in range(1, len(plan.levels)):
-        for t, shifts in enumerate(plan.level_shifts[j - 1], start=1):
-            msgs = {}
-            for k in range(K):
-                for rho, s in enumerate(shifts, start=1):
-                    dst_slots, src_slots = multilevel_level_slots(plan, j, t, rho)
-                    if src_slots.size == 0:
-                        continue
-                    dst_dev = multilevel_dev_shift(plan, k, j, s)
-                    msgs[(k, dst_dev)] = [
-                        (int(ld), w[k, int(ls)])
-                        for ld, ls in zip(dst_slots, src_slots)
-                    ]
-            delivered = sim.exchange(msgs)
-            for (src, dst), items in delivered.items():
-                for ld, val in items:
-                    w[dst, ld] = field.add(w[dst, ld], val)
-
-    out = np.array([w[k, 0] for k in range(K)], dtype=np.uint64)
-    return out, sim.stats
+    constraints (generic IR interpreter); bit-exact ``x @ A`` for ANY matrix
+    A and ANY factorization. Returns (x̃, stats)."""
+    out, stats = interpret(plan.to_ir(A, q=field.q), x, field)
+    np.testing.assert_array_equal(out, field.matmul(field.asarray(x), A))
+    return out, stats
 
 
 # ---------------------------------------------------------------------------
@@ -529,58 +460,72 @@ class RingPlan:
     def algorithm(self) -> str:
         return "ring"
 
+    def to_ir(self, A=None, *, q: int = M31):
+        return _ring_ir(self, A, q=q)
+
 
 def plan_ring(K: int, p: int) -> RingPlan:
     return RingPlan(K=K, p=p)
 
 
+def _ring_ir(plan: RingPlan, A=None, *, q: int = M31):
+    """Compile the neighbor-only schedule: round j's forward stream carries
+    the offset-(j−1) packet to k+1 (stored at offset j), the backward stream
+    the offset-(K−j+1) packet to k−1 (stored at offset K−j); one final
+    LocalOp combines all K offsets against the receiver's column of A."""
+    from repro.core.ir import CommRound, LocalOp, ScheduleIR, Transfer, _combine_coeffs
+
+    K = plan.K
+    steps: list = []
+
+    def fwd(j):
+        return [
+            Transfer(k, (k + 1) % K, port=1, slots=((j - 1, j),), mode="store")
+            for k in range(K)
+        ]
+
+    def bwd(j):
+        return [
+            Transfer(
+                k,
+                (k - 1) % K,
+                port=2,
+                slots=(((K - j + 1) % K, K - j),),
+                mode="store",
+            )
+            for k in range(K)
+        ]
+
+    if K > 1:
+        if plan.p == 1:
+            for j in range(1, K):
+                steps.append(CommRound(tuple(fwd(j))))
+        else:
+            r = -(-(K - 1) // 2)
+            for j in range(1, r + 1):
+                ts = fwd(j)
+                if not (j == r and (K - 1) % 2 == 1):  # odd remainder: fwd only
+                    ts += bwd(j)
+                steps.append(CommRound(tuple(ts)))
+    steps.append(LocalOp((0,), tuple(range(K)), _combine_coeffs(K, A, q)))
+    return ScheduleIR("ring", K, plan.p, tuple(steps))
+
+
 def ring_rounds(plan: RingPlan) -> list[dict]:
     """Per-round message maps {(src, dst): elements} of the ring schedule
     (the lowering format of topo.lower / SimStats.round_messages)."""
-    K = plan.K
-    rounds: list[dict] = []
-    if K <= 1:
-        return rounds
-    if plan.p == 1:
-        for _ in range(K - 1):
-            rounds.append({(k, (k + 1) % K): 1 for k in range(K)})
-        return rounds
-    r = -(-(K - 1) // 2)
-    for j in range(1, r + 1):
-        msgs = {(k, (k + 1) % K): 1 for k in range(K)}
-        if not (j == r and (K - 1) % 2 == 1):  # odd remainder: fwd only
-            msgs.update({(k, (k - 1) % K): 1 for k in range(K)})
-        rounds.append(msgs)
-    return rounds
+    from repro.core.ir import ir_messages
+
+    return ir_messages(plan.to_ir())
 
 
 def simulate_ring_encode(
     x: np.ndarray, A: np.ndarray, plan: RingPlan, field: Field
 ) -> tuple[np.ndarray, SimStats]:
     """Store-and-forward execution of the ring schedule; exact for any A."""
-    K = plan.K
-    sim = SyncSimulator(K, plan.p)
-    x = field.asarray(x)
-    A = field.asarray(A)
-    have = {k: {k: x[k]} for k in range(K)}
-    for j, msgs in enumerate(ring_rounds(plan), start=1):
-        payloads = {}
-        for (src, dst) in msgs:
-            # forward stream carries x_{src-(j-1)}, backward x_{src+(j-1)}
-            r = (src - (j - 1)) % K if dst == (src + 1) % K else (src + (j - 1)) % K
-            payloads[(src, dst)] = [(r, have[src][r])]
-        delivered = sim.exchange(payloads)
-        for (src, dst), items in delivered.items():
-            for r, val in items:
-                have[dst][r] = val
-    out = np.zeros(K, dtype=np.uint64)
-    for k in range(K):
-        assert len(have[k]) == K, "ring gather must cover all packets"
-        acc = np.uint64(0)
-        for r in range(K):
-            acc = field.add(acc, field.mul(have[k][r], A[r, k]))
-        out[k] = acc
-    return out, sim.stats
+    out, stats = interpret(plan.to_ir(A, q=field.q), x, field)
+    np.testing.assert_array_equal(out, field.matmul(field.asarray(x), A))
+    return out, stats
 
 
 # ---------------------------------------------------------------------------
@@ -614,6 +559,26 @@ class TwoLevelDFTPlan:
     @property
     def algorithm(self) -> str:
         return "hierarchical-dft"
+
+    def to_ir(self):
+        from repro.core.ir import LocalOp, ScheduleIR, embed_parallel, ir_butterfly
+
+        I, G, K = self.k_intra, self.k_inter, self.K
+        steps: list = []
+        if I > 1:
+            sub = ir_butterfly(plan_butterfly(I, self.p, self.q))
+            steps += embed_parallel(
+                sub, K, [g * I + np.arange(I) for g in range(G)]
+            )
+        tw = np.zeros((K, 1, 1), dtype=np.uint64)
+        tw[:, 0, 0] = self.twiddle
+        steps.append(LocalOp((0,), (0,), tw))
+        if G > 1:
+            sub = ir_butterfly(plan_butterfly(G, self.p, self.q))
+            steps += embed_parallel(
+                sub, K, [np.arange(G) * I + i for i in range(I)]
+            )
+        return ScheduleIR("hierarchical-dft", K, self.p, tuple(steps))
 
 
 def plan_two_level_dft(K: int, p: int, q: int, k_intra: int) -> TwoLevelDFTPlan:
@@ -662,54 +627,152 @@ def two_level_dft_matrix(plan: TwoLevelDFTPlan) -> np.ndarray:
 def simulate_two_level_dft(
     x: np.ndarray, plan: TwoLevelDFTPlan, field: Field
 ) -> tuple[np.ndarray, SimStats]:
-    """Both butterfly stages message-by-message on one simulator: every
+    """Both butterfly stages message-by-message on one interpreter: every
     group's (resp. stride-column's) butterfly shares rounds, so C1 = C2 =
     log I + log G is measured globally under the p-port constraints."""
-    K, p, I, G = plan.K, plan.p, plan.k_intra, plan.k_inter
+    return interpret(plan.to_ir(), x, field)
+
+
+# ---------------------------------------------------------------------------
+# recursive multi-level Cooley–Tukey DFT (K = Π K_level)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MultiLevelDFTPlan:
+    """Recursive Cooley–Tukey factorization over ``levels`` (innermost
+    first, each a power of p+1, Π = K): one radix-(p+1) butterfly stage per
+    level over that level's coordinate, with a diagonal twiddle applied
+    before each stage — C1 = C2 = Σ_j log_{p+1} K_j = log_{p+1} K, the
+    structured analogue of :class:`MultiLevelPlan`.
+
+    Built by iterating the verified two-level identity β^{nk} = ω_I^{n1·k1} ·
+    β^{n2·k1} · ω_G^{n2·k2}: the inter factor DFT_G is itself factored over
+    ``levels[1:]`` (the field's canonical roots nest exactly —
+    ``root_of_unity(G) = root_of_unity(K)^I``). Relabelings compose "up to
+    permutation" exactly as in the two-level case: device k holds source
+    coefficient ``input_coeff[k]`` and finishes with X[``output_index[k]``];
+    :func:`multilevel_dft_matrix` is the effective generator.
+
+    This plan has NO bespoke simulator/lowering/executor: it compiles
+    straight to ScheduleIR (``to_ir``), so simulation is
+    ``core.simulator.interpret``, pricing is ``topo.lower.lower``, and mesh
+    execution is ``dist.collectives.ir_encode_jit``."""
+
+    K: int
+    p: int
+    q: int
+    levels: tuple[int, ...]
+    input_coeff: np.ndarray  # (K,)
+    output_index: np.ndarray  # (K,)
+    stage_twiddles: tuple  # per level: (K,) uint64 diagonal applied pre-stage
+
+    @property
+    def c1(self) -> int:
+        return sum(ceil_log(v, self.p + 1) for v in self.levels)
+
+    @property
+    def c2(self) -> int:
+        return self.c1  # every stage is a butterfly: 1 element per round
+
+    @property
+    def algorithm(self) -> str:
+        return "multilevel-dft"
+
+    def to_ir(self):
+        from repro.core.ir import LocalOp, ScheduleIR, embed_parallel, ir_butterfly
+
+        K, p, q = self.K, self.p, self.q
+        steps: list = []
+        stride = 1
+        for j, nj in enumerate(self.levels):
+            tw = np.zeros((K, 1, 1), dtype=np.uint64)
+            tw[:, 0, 0] = self.stage_twiddles[j]
+            steps.append(LocalOp((0,), (0,), tw))
+            if nj > 1:
+                sub = ir_butterfly(plan_butterfly(nj, p, q))
+                maps = []
+                for hi in range(K // (stride * nj)):
+                    for lo in range(stride):
+                        maps.append(hi * stride * nj + lo + np.arange(nj) * stride)
+                steps += embed_parallel(sub, K, maps)
+            stride *= nj
+        return ScheduleIR("multilevel-dft", K, p, tuple(steps))
+
+
+def plan_multilevel_dft(K: int, p: int, q: int, levels) -> MultiLevelDFTPlan:
+    """Requires K | q−1 and every level a power of p+1 (trivial levels of
+    size 1 are allowed — their stage has zero rounds and an all-ones twiddle
+    that ``fuse_trivial_rounds`` removes)."""
+    levels = tuple(int(v) for v in levels)
     radix = p + 1
-    sim = SyncSimulator(K, p)
-    v = field.asarray(x).copy()
+    prod = 1
+    for v in levels:
+        prod *= v
+    if not levels or prod != K or any(v < 1 for v in levels):
+        raise ValueError(f"levels must be positive with Π levels = K: {levels}, K={K}")
+    for v in levels:
+        if radix ** ceil_log(v, radix) != v:
+            raise ValueError(f"level size {v} is not a power of {radix}")
+    if K > 1 and (q - 1) % K:
+        raise ValueError(f"K={K} must divide q-1={q - 1}")
+    f = Field(q)
 
-    def run_stage(bf_plan, n_local, to_global):
-        """One butterfly over every parallel subgroup at once; ``to_global``
-        maps (subgroup, local index) → processor id."""
-        nonlocal v
-        n_sub = K // n_local
-        for t in range(bf_plan.H):
-            perms = butterfly_group_perms(n_local, radix, t)
-            msgs = {}
-            for sub in range(n_sub):
-                for lk in range(n_local):
-                    src = to_global(sub, lk)
-                    for dst_map in perms:
-                        msgs[(src, to_global(sub, int(dst_map[lk])))] = [v[src]]
-            delivered = sim.exchange(msgs)
-            step = radix**t
-            tw = bf_plan.twiddles[t]
-            new_v = v.copy()
-            for sub in range(n_sub):
-                received = {}
-                for lk in range(n_local):
-                    received.setdefault(lk, {})[(lk // step) % radix] = v[
-                        to_global(sub, lk)
-                    ]
-                for lk in range(n_local):
-                    gk = to_global(sub, lk)
-                    for dst_map in perms:
-                        received[int(dst_map[lk])][(lk // step) % radix] = v[gk]
-                for lk in range(n_local):
-                    acc = np.uint64(0)
-                    for rho in range(radix):
-                        acc = field.add(
-                            acc,
-                            field.mul(np.uint64(tw[lk, rho]), received[lk][rho]),
-                        )
-                    new_v[to_global(sub, lk)] = acc
-            v = new_v
+    def build(lvls):
+        n = 1
+        for v in lvls:
+            n *= v
+        if len(lvls) == 1:
+            I = lvls[0]
+            rev = (
+                digit_reversal_permutation(I, radix)
+                if I > 1
+                else np.zeros(1, dtype=np.int64)
+            )
+            return (
+                rev.astype(np.int64),
+                np.arange(I, dtype=np.int64),
+                [np.ones(I, dtype=np.uint64)],
+            )
+        I = lvls[0]
+        G = n // I
+        sub_in, sub_out, sub_tw = build(lvls[1:])
+        rev_i = (
+            digit_reversal_permutation(I, radix)
+            if I > 1
+            else np.zeros(1, dtype=np.int64)
+        )
+        k = np.arange(n)
+        g, i = k // I, k % I
+        input_coeff = G * rev_i[i] + sub_in[g]
+        output_index = i + I * sub_out[g]
+        if n > 1:
+            beta = f.root_of_unity(n)
+            cross = f.pow(np.full(n, beta, dtype=np.uint64), sub_in[g] * i)
+        else:
+            cross = np.ones(n, dtype=np.uint64)
+        tws = [np.ones(n, dtype=np.uint64), f.mul(cross, sub_tw[0][g])]
+        for j in range(1, len(sub_tw)):
+            tws.append(sub_tw[j][g].astype(np.uint64))
+        return input_coeff, output_index, tws
 
-    if I > 1:
-        run_stage(plan_butterfly(I, p, plan.q), I, lambda sub, lk: sub * I + lk)
-    v = field.mul(v, plan.twiddle)
-    if G > 1:
-        run_stage(plan_butterfly(G, p, plan.q), G, lambda sub, lk: lk * I + sub)
-    return v, sim.stats
+    input_coeff, output_index, tws = build(levels)
+    return MultiLevelDFTPlan(
+        K=K,
+        p=p,
+        q=q,
+        levels=levels,
+        input_coeff=np.asarray(input_coeff, dtype=np.int64),
+        output_index=np.asarray(output_index, dtype=np.int64),
+        stage_twiddles=tuple(np.asarray(t, dtype=np.uint64) for t in tws),
+    )
+
+
+def multilevel_dft_matrix(plan: MultiLevelDFTPlan) -> np.ndarray:
+    """The effective generator: M[k, k'] = D_K[input_coeff[k],
+    output_index[k']] — a row/col permutation of the DFT matrix (still MDS),
+    so ``interpret(plan.to_ir(), x, f) == x @ M`` bit-exactly."""
+    from repro.core.matrices import dft_matrix
+
+    D = dft_matrix(Field(plan.q), plan.K)
+    return D[plan.input_coeff][:, plan.output_index]

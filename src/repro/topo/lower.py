@@ -1,17 +1,21 @@
 """Lower round schedules onto topologies: message maps, hops, contention.
 
-Every algorithm's compile-time plan is expanded into the explicit per-round
-message maps ``{(src, dst): elements}`` — the SAME shape the cost-exact
-simulator records in ``SimStats.round_messages``, so each lowering is
-cross-checkable message-for-message against the exact simulation (see
-tests/test_topo.py). A :class:`LoweredSchedule` then prices itself on any
+ONE deriver: every plan compiles to :class:`~repro.core.ir.ScheduleIR`
+(``plan.to_ir()``) and :func:`repro.core.ir.ir_messages` expands the IR into
+the explicit per-round message maps ``{(src, dst): elements}`` — the SAME
+shape the cost-exact interpreter records in ``SimStats.round_messages``, so
+every lowering is cross-checkable message-for-message against the exact
+simulation (see tests/test_topo.py and tests/test_ir.py). A
+:class:`LoweredSchedule` then prices itself on any
 :class:`~repro.topo.model.Topology` via the α-β estimator: per-round hop
 counts, per-link contention, and estimated wall time.
 
-The lowerings mirror the simulators exactly, including the small-K edge
-cases (self-sends skipped, duplicate destinations deduplicated, dead slots
-never shipped) — an analytically recomputed schedule that disagrees with the
-simulation by even one message is a bug, not an approximation.
+The legacy per-family ``rounds_*`` helpers are thin wrappers over
+``ir_messages(plan.to_ir())`` — the IR compilers mirror the simulators
+exactly, including the small-K edge cases (self-sends skipped, duplicate
+destinations deduplicated, dead slots never shipped): an analytically
+recomputed schedule that disagrees with the simulation by even one message
+is a bug, not an approximation.
 
 Paper-notation glossary: ``K`` processors, ``p`` ports per round, ``C1`` =
 round count, ``C2`` = Σ over rounds of the largest per-port message (field
@@ -25,25 +29,15 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-from repro.core.bounds import ceil_log
-from repro.core.schedule import (
-    ButterflyPlan,
-    DrawLoosePlan,
-    PrepareShootPlan,
-    butterfly_group_perms,
-    shoot_round_message_size,
-)
+from repro.core.ir import ScheduleIR, ir_allgather, ir_messages
+from repro.core.schedule import ButterflyPlan, DrawLoosePlan, PrepareShootPlan
 
 from .hierarchical import (
     HierarchicalPlan,
     MultiLevelPlan,
     RingPlan,
     TwoLevelDFTPlan,
-    gather_rounds,
-    hier_shoot_message_size,
-    multilevel_dev_shift,
-    multilevel_message_size,
-    ring_rounds,
+    ring_rounds,  # noqa: F401  (compat re-export; itself IR-derived now)
 )
 from .model import TimeEstimate, Topology, round_link_loads, schedule_time
 
@@ -79,197 +73,67 @@ class LoweredSchedule:
         return schedule_time(topo, list(self.rounds), payload_elems)
 
 
+def lower_ir(ir: ScheduleIR) -> LoweredSchedule:
+    """Any ScheduleIR → its priced message-map form (the ONE deriver)."""
+    return LoweredSchedule(ir.algorithm, ir.K, ir.p, tuple(ir_messages(ir)))
+
+
+def lower(plan, inverse: bool = False) -> LoweredSchedule:
+    """Lower any schedule plan to its explicit round message maps by
+    compiling it to ScheduleIR. Works for every plan with a ``to_ir`` —
+    including new algorithms that never register a bespoke lowering."""
+    if isinstance(plan, ButterflyPlan):
+        return lower_ir(plan.to_ir(inverse=inverse))
+    if not hasattr(plan, "to_ir"):
+        raise TypeError(f"cannot lower {type(plan).__name__}")
+    return lower_ir(plan.to_ir())
+
+
+def lower_allgather(K: int, p: int) -> LoweredSchedule:
+    return lower_ir(ir_allgather(K, p))
+
+
 # ---------------------------------------------------------------------------
-# per-algorithm lowerings
+# per-algorithm compatibility wrappers (all route through the IR)
 # ---------------------------------------------------------------------------
 
 
 def rounds_prepare_shoot(plan: PrepareShootPlan) -> list[dict]:
-    """§IV prepare-and-shoot. Prepare round t forwards the whole storage
-    (|distinct residues| elements — dict-keyed like the simulator, so
-    collapsed shifts and self-sends vanish in the K ≤ m regime); shoot round
-    t ships the live digit-t slices."""
-    K, p = plan.K, plan.p
-    rounds = []
-    offsets = {0}  # residue offsets held — identical at every k by symmetry
-    for shifts in plan.prepare_shifts:
-        size = len(offsets)
-        msgs = {}
-        for k in range(K):
-            for s in shifts:
-                dst = (k + s) % K
-                if dst != k:
-                    msgs[(k, dst)] = size
-        rounds.append(msgs)
-        base = set(offsets)  # all sends use pre-round storage
-        for s in shifts:
-            if s % K:
-                offsets |= {(o + s) % K for o in base}
-    for t in range(1, plan.Ts + 1):
-        msgs = {}
-        for rho in range(1, p + 1):
-            sz = shoot_round_message_size(plan, t, rho)
-            if sz:
-                s = plan.shoot_shifts[t - 1][rho - 1]
-                for k in range(K):
-                    msgs[(k, (k + s) % K)] = sz
-        rounds.append(msgs)
-    return rounds
+    """§IV prepare-and-shoot (prepare forwards the whole residue buffer,
+    shoot ships the live digit-t slices)."""
+    return ir_messages(plan.to_ir())
 
 
 def rounds_butterfly(plan: ButterflyPlan, inverse: bool = False) -> list[dict]:
     """§V-A butterfly: round t broadcasts 1 element to the p digit-t
     partners (the inverse runs the same pattern in reverse round order)."""
-    K, radix = plan.K, plan.radix
-    order = range(plan.H - 1, -1, -1) if inverse else range(plan.H)
-    rounds = []
-    for t in order:
-        msgs = {}
-        for dst_map in butterfly_group_perms(K, radix, t):
-            for k in range(K):
-                msgs[(k, int(dst_map[k]))] = 1
-        rounds.append(msgs)
-    return rounds
+    return ir_messages(plan.to_ir(inverse=inverse))
 
 
 def rounds_draw_loose(plan: DrawLoosePlan) -> list[dict]:
     """§V-B: Z parallel M-point prepare-and-shoots over stride-Z subgroups
-    (merged round-by-round — disjoint groups share rounds), then M parallel
-    Z-point butterflies over contiguous groups."""
-    Z, M = plan.Z, plan.M
-    rounds = []
-    if plan.draw_plan is not None:
-        for sub_round in rounds_prepare_shoot(plan.draw_plan):
-            msgs = {}
-            for j in range(Z):
-                for (src, dst), sz in sub_round.items():
-                    msgs[(j + Z * src, j + Z * dst)] = sz
-            rounds.append(msgs)
-    if plan.loose_plan is not None:
-        for sub_round in rounds_butterfly(plan.loose_plan):
-            msgs = {}
-            for i in range(M):
-                for (src, dst), sz in sub_round.items():
-                    msgs[(Z * i + src, Z * i + dst)] = sz
-            rounds.append(msgs)
-    return rounds
+    (merged round-by-round), then M parallel Z-point butterflies."""
+    return ir_messages(plan.to_ir())
 
 
 def rounds_allgather(K: int, p: int) -> list[dict]:
     """The optimal flat p-port all-gather baseline ((p+1)-ary doubling)."""
-    rounds = []
-    for ports in gather_rounds(K, p):
-        msgs = {}
-        for k in range(K):
-            for s, cnt in ports:
-                msgs[(k, (k + s) % K)] = cnt
-        rounds.append(msgs)
-    return rounds
+    return ir_messages(ir_allgather(K, p))
 
 
 def rounds_hierarchical(plan: HierarchicalPlan) -> list[dict]:
     """Two-level universal encode: intra doubling gather inside each group,
     then the inter digit-reduction shoot across groups (live slots only)."""
-    K, p, I, G = plan.K, plan.p, plan.k_intra, plan.k_inter
-    rounds = []
-    for ports in plan.intra_rounds:
-        msgs = {}
-        for k in range(K):
-            g, i = divmod(k, I)
-            for s, cnt in ports:
-                msgs[(k, g * I + (i + s) % I)] = cnt
-        rounds.append(msgs)
-    for t, shifts in enumerate(plan.inter_shifts, start=1):
-        msgs = {}
-        for rho, s in enumerate(shifts, start=1):
-            sz = hier_shoot_message_size(plan, t, rho)
-            if sz:
-                for k in range(K):
-                    g, i = divmod(k, I)
-                    msgs[(k, ((g + s) % G) * I + i)] = sz
-        rounds.append(msgs)
-    return rounds
+    return ir_messages(plan.to_ir())
 
 
 def rounds_multilevel(plan: MultiLevelPlan) -> list[dict]:
     """Recursive K = Π K_j encode: level-0 doubling gather, then one §IV
-    digit-reduction shoot per outer level (innermost first), every message
-    shifting exactly one level's coordinate (live slots only)."""
-    K, K0 = plan.K, plan.levels[0]
-    rounds = []
-    for ports in plan.intra_rounds:
-        msgs = {}
-        for k in range(K):
-            g, i = divmod(k, K0)
-            for s, cnt in ports:
-                msgs[(k, g * K0 + (i + s) % K0)] = cnt
-        rounds.append(msgs)
-    for j in range(1, len(plan.levels)):
-        for t, shifts in enumerate(plan.level_shifts[j - 1], start=1):
-            msgs = {}
-            for rho, s in enumerate(shifts, start=1):
-                sz = multilevel_message_size(plan, j, t, rho)
-                if sz:
-                    for k in range(K):
-                        msgs[(k, multilevel_dev_shift(plan, k, j, s))] = sz
-            rounds.append(msgs)
-    return rounds
+    digit-reduction shoot per outer level (innermost first)."""
+    return ir_messages(plan.to_ir())
 
 
 def rounds_two_level_dft(plan: TwoLevelDFTPlan) -> list[dict]:
     """Cooley–Tukey: intra butterfly within contiguous groups, then inter
     butterfly over stride-I columns (1 element per message throughout)."""
-    I, G, radix = plan.k_intra, plan.k_inter, plan.p + 1
-    rounds = []
-    if I > 1:
-        for t in range(ceil_log(I, radix)):
-            msgs = {}
-            for dst_map in butterfly_group_perms(I, radix, t):
-                for g in range(G):
-                    for i in range(I):
-                        msgs[(g * I + i, g * I + int(dst_map[i]))] = 1
-            rounds.append(msgs)
-    if G > 1:
-        for t in range(ceil_log(G, radix)):
-            msgs = {}
-            for dst_map in butterfly_group_perms(G, radix, t):
-                for i in range(I):
-                    for g in range(G):
-                        msgs[(g * I + i, int(dst_map[g]) * I + i)] = 1
-            rounds.append(msgs)
-    return rounds
-
-
-def lower(plan, inverse: bool = False) -> LoweredSchedule:
-    """Lower any schedule plan to its explicit round message maps."""
-    if isinstance(plan, PrepareShootPlan):
-        return LoweredSchedule(
-            "prepare-shoot", plan.K, plan.p, tuple(rounds_prepare_shoot(plan))
-        )
-    if isinstance(plan, ButterflyPlan):
-        return LoweredSchedule(
-            "butterfly", plan.K, plan.p, tuple(rounds_butterfly(plan, inverse))
-        )
-    if isinstance(plan, DrawLoosePlan):
-        return LoweredSchedule(
-            "draw-loose", plan.K, plan.p, tuple(rounds_draw_loose(plan))
-        )
-    if isinstance(plan, HierarchicalPlan):
-        return LoweredSchedule(
-            "hierarchical", plan.K, plan.p, tuple(rounds_hierarchical(plan))
-        )
-    if isinstance(plan, MultiLevelPlan):
-        return LoweredSchedule(
-            "multilevel", plan.K, plan.p, tuple(rounds_multilevel(plan))
-        )
-    if isinstance(plan, TwoLevelDFTPlan):
-        return LoweredSchedule(
-            "hierarchical-dft", plan.K, plan.p, tuple(rounds_two_level_dft(plan))
-        )
-    if isinstance(plan, RingPlan):
-        return LoweredSchedule("ring", plan.K, plan.p, tuple(ring_rounds(plan)))
-    raise TypeError(f"cannot lower {type(plan).__name__}")
-
-
-def lower_allgather(K: int, p: int) -> LoweredSchedule:
-    return LoweredSchedule("allgather", K, p, tuple(rounds_allgather(K, p)))
+    return ir_messages(plan.to_ir())

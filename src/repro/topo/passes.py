@@ -1,0 +1,128 @@
+"""Topology-aware ScheduleIR rewrite passes.
+
+:func:`remap_digits` is the torus-native butterfly from the ROADMAP: the
+radix-(p+1) butterfly's digit-t partners sit at stride (p+1)^t, so on a 2D
+torus the plain schedule pays multi-hop routes and link contention.
+``topo/lower.py`` only *prices* that contention; this pass actually
+reshuffles the schedule — it chooses a digit→mesh-dimension assignment and a
+per-dimension cyclic Gray relabeling so that every round's partner exchange
+runs between torus neighbors, then relabels the whole IR with
+:func:`repro.core.ir.relabel` (the ``placement`` metadata keeps logical
+inputs/outputs in place).
+
+Why Gray codes: a ring of size radix² admits a cyclic radix-ary Gray
+labeling in which incrementing EITHER digit moves to a ring neighbor (for
+radix 2 this is the classic reflected Gray code on the 4-cycle: bit-0 flips
+use edges {0-1, 2-3}, bit-1 flips use {1-2, 3-0}). Rings of size radix are
+trivially neighbor-complete for radix ≤ 3. Hence for p = 1 every 2D torus
+whose dimensions are 2 or 4 (e.g. 2×4 for K = 8, 4×4 for K = 16) gets a
+hop-count-1 embedding for EVERY round — asserted in tests/test_ir.py. For
+larger dimensions no dilation-1 embedding exists (a d-cube has d·2^{d-1}
+edges, a 2^d-ring only 2^d), so the pass picks the assignment minimizing
+total hops and lets the α-β price decide whether it wins.
+"""
+
+from __future__ import annotations
+
+from itertools import combinations
+
+import numpy as np
+
+from repro.core.ir import ScheduleIR, relabel
+
+from .model import Torus2D
+
+
+def _gray_positions(n_digits: int, radix: int) -> np.ndarray:
+    """pos_of_label for a ring of radix**n_digits positions: label ℓ (radix-
+    ary digits) → ring position, cyclic-Gray for radix 2, identity otherwise
+    (identity is neighbor-complete for a single digit when radix ≤ 3)."""
+    size = radix**n_digits
+    if radix == 2:
+        pos_of_label = np.empty(size, dtype=np.int64)
+        for pos in range(size):
+            pos_of_label[pos ^ (pos >> 1)] = pos  # BRGC: label(pos) = pos ^ pos>>1
+        return pos_of_label
+    return np.arange(size, dtype=np.int64)
+
+
+def _digit_values(K: int, radix: int, digits) -> np.ndarray:
+    """(K,) integer formed by the given digit positions of each k (given
+    order: first listed digit is least significant)."""
+    k = np.arange(K, dtype=np.int64)
+    out = np.zeros(K, dtype=np.int64)
+    mult = 1
+    for t in digits:
+        out += ((k // radix**t) % radix) * mult
+        mult *= radix
+    return out
+
+
+def _embedding(K: int, radix: int, col_digits, row_digits, cols: int) -> np.ndarray:
+    """π: logical butterfly index → torus device r·cols + c, Gray-relabeled
+    per dimension."""
+    col_pos = _gray_positions(len(col_digits), radix)[
+        _digit_values(K, radix, col_digits)
+    ]
+    row_pos = _gray_positions(len(row_digits), radix)[
+        _digit_values(K, radix, row_digits)
+    ]
+    return row_pos * cols + col_pos
+
+
+def _total_hops(ir: ScheduleIR, topo: Torus2D, perm: np.ndarray) -> int:
+    total = 0
+    for r in ir.rounds():
+        for t in r.transfers:
+            total += topo.hops(int(perm[t.src]), int(perm[t.dst]))
+    return total
+
+
+def remap_digits(ir: ScheduleIR, topo: Torus2D) -> ScheduleIR:
+    """Rewrite a radix-(p+1) butterfly IR for a 2D torus: assign each digit
+    to a torus dimension (enumerating assignments, minimizing total hops)
+    and Gray-relabel each dimension's ring so digit increments land on
+    neighbors. Returns the relabeled IR (``placement`` set); exactness is
+    :func:`relabel`'s — the schedule is the same program on renamed
+    processors."""
+    if not isinstance(topo, Torus2D):
+        raise TypeError("remap_digits targets Torus2D topologies")
+    K, radix = ir.K, ir.p + 1
+    if topo.n != K:
+        raise ValueError(f"topology has {topo.n} processors, IR has {K}")
+
+    def log_radix(n):
+        h = 0
+        while radix**h < n:
+            h += 1
+        return h if radix**h == n else None
+
+    a = log_radix(topo.rows)
+    b = log_radix(topo.cols)
+    if a is None or b is None:
+        raise ValueError(
+            f"torus dims ({topo.rows}, {topo.cols}) are not powers of radix {radix}"
+        )
+    H = a + b
+    if radix**H != K:
+        raise ValueError(f"K={K} is not radix^(rows·cols digits)")
+    best = None
+    digit_sets = (
+        combinations(range(H), b) if H <= 12 else [tuple(range(b))]
+    )
+    for col_digits in digit_sets:
+        row_digits = tuple(t for t in range(H) if t not in col_digits)
+        perm = _embedding(K, radix, col_digits, row_digits, topo.cols)
+        hops = _total_hops(ir, topo, perm)
+        if best is None or hops < best[0]:
+            best = (hops, perm)
+    return relabel(ir, best[1])
+
+
+def max_round_hops(ir: ScheduleIR, topo) -> int:
+    """Worst route length (links) of any transfer in any round — the
+    hop-count-1 acceptance check for :func:`remap_digits`."""
+    return max(
+        (topo.hops(t.src, t.dst) for r in ir.rounds() for t in r.transfers),
+        default=0,
+    )

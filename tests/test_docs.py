@@ -101,5 +101,14 @@ def test_public_topo_and_dist_api_is_documented():
         "hierarchical_encode_jit",
         "multilevel_encode_jit",
         "resolve_profile",
+        # the ScheduleIR pipeline (PR 4)
+        "ScheduleIR",
+        "to_ir",
+        "interpret",
+        "ir_encode_jit",
+        "fuse_trivial_rounds",
+        "remap_digits",
+        "fit_level_costs",
+        "plan_multilevel_dft",
     ]:
         assert name in all_docs, f"public symbol {name} not mentioned in docs"

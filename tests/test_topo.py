@@ -403,8 +403,12 @@ def test_autotuner_c1_matches_simulator_on_every_topology(topo_name):
             _, st = simulate_ring_encode(x, A, cand.plan, f)
         elif cand.algorithm == "allgather":
             continue  # baseline foil has no message-passing simulator
-        else:  # pragma: no cover
-            raise AssertionError(cand.algorithm)
+        else:
+            # algorithms born after the ScheduleIR refactor need no bespoke
+            # simulator: their candidate IR interprets directly
+            from repro.core.simulator import interpret
+
+            _, st = interpret(cand.ir, x, f)
         assert cand.c1 == st.C1, (topo_name, cand.algorithm)
 
 

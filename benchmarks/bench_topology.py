@@ -19,7 +19,13 @@ into sibling benchmarks). Emits ``results/BENCH_topology.json`` with:
   ``topo.fit_level_costs`` least-squares into per-level α/β (the ROADMAP
   calibration item), plus the fitted costs themselves.
 
-``launch/perf_report.py`` renders the predicted-vs-measured tables.
+The ``predicted`` tables include every (algorithm, pipeline) candidate the
+autotuner enumerated (rows like ``draw-loose+align-subgroups`` carry their
+``pipeline`` name), and the persisted ``calibration.fitted_level_costs``
+block is verified to round-trip through ``topo.calibrate.load_fitted_costs``
+— the exact loader ``launch.profiles.resolve_profile`` uses to price with
+measured constants. ``launch/perf_report.py`` renders the
+predicted-vs-measured tables.
 """
 
 from __future__ import annotations
@@ -116,10 +122,19 @@ def run():
     measured_us = {alg: times[str(PAY)] for alg, times in sweep.items()}
     topo = TwoLevel(k_intra=2, k_inter=4)
     result = autotune(K, 1, PAY * 4, topo, generator="vandermonde")
-    predicted = {
-        c.algorithm: {"us": c.predicted_time * 1e6, "c1": c.c1, "c2": c.c2}
-        for c in result.candidates
-    }
+
+    def predicted_rows(res):
+        return {
+            c.algorithm: {
+                "us": c.predicted_time * 1e6,
+                "c1": c.c1,
+                "c2": c.c2,
+                "pipeline": c.pipeline,
+            }
+            for c in res.candidates
+        }
+
+    predicted = predicted_rows(result)
     two_level_us = {a: u for a, u in measured_us.items() if a != "multilevel"}
     record = {
         "K": K,
@@ -128,6 +143,7 @@ def run():
         "mesh": "4x2 (inter x intra), forced-host",
         "topology": "two-level k_intra=2 k_inter=4",
         "autotuner_choice": result.algorithm,
+        "autotuner_choice_pipeline": result.chosen.pipeline,
         "measured_us": two_level_us,
         # seconds, the unit autotune(..., measured=...) compares against
         "measured_s": {alg: us * 1e-6 for alg, us in two_level_us.items()},
@@ -146,10 +162,7 @@ def run():
         "autotuner_choice": result3.algorithm,
         "measured_us": three_level_us,
         "measured_s": {alg: us * 1e-6 for alg, us in three_level_us.items()},
-        "predicted": {
-            c.algorithm: {"us": c.predicted_time * 1e6, "c1": c.c1, "c2": c.c2}
-            for c in result3.candidates
-        },
+        "predicted": predicted_rows(result3),
     }
     # calibration block: per-(algorithm, payload) wall seconds + the
     # per-round {level, msgs, elems} rows fit_level_costs consumes
@@ -183,8 +196,15 @@ def run():
         "measured→α/β path; run on real ICI/DCI hardware for usable costs",
     }
     os.makedirs(os.path.join(REPO, "results"), exist_ok=True)
-    with open(os.path.join(REPO, "results", "BENCH_topology.json"), "w") as fh:
+    out_path = os.path.join(REPO, "results", "BENCH_topology.json")
+    with open(out_path, "w") as fh:
         json.dump(record, fh, indent=2)
+    # the persisted block must round-trip through the loader resolve_profile
+    # uses — the calibration loop is only closed if this re-reads exactly
+    from repro.topo import load_fitted_costs
+
+    reloaded = load_fitted_costs(out_path)
+    assert reloaded == fitted, f"calibration round-trip failed: {reloaded}"
     for alg, us in measured_us.items():
         pred = (
             record["three_level"]["predicted"]

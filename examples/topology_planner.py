@@ -11,28 +11,34 @@ Run:  PYTHONPATH=src python examples/topology_planner.py \
       PYTHONPATH=src python examples/topology_planner.py \
           --K 32 --topology hierarchy --levels 4,4,2
 
-Topologies: flat | ring | torus | two-level | hierarchy.
+Topologies: flat | ring | torus | torus3d | two-level | hierarchy.
 ``torus``/``two-level`` take ``--intra`` (fast-domain size);
 ``hierarchy`` takes ``--levels`` — comma-separated per-level sizes,
 innermost (fastest links) first, multiplying to K (default: a balanced
-three-level factorization of K). Generators: general | vandermonde | dft
+three-level factorization of K); ``torus3d`` reuses ``--levels`` as its
+(cols, rows, depth) dims. Generators: general | vandermonde | dft
 (structured kinds unlock the specific algorithms; dft needs K compatible
 with the field).
 
-Reading the output: on a hierarchy the ``multilevel`` row is the recursive
+Reading the output: a candidate is an (algorithm, pipeline) pair — rows
+like ``butterfly+remap-digits`` are a base compile rewritten by a named
+``topo.passes`` pipeline (here the Gray-relabeled butterfly whose partners
+are torus neighbors). On a hierarchy the ``multilevel`` row is the recursive
 schedule whose phases align with the topology's levels (gather on the
 fastest links, one digit-reduction shoot per level); ``contention`` is the
 worst number of messages sharing one link in any round — the quantity the
-level-aligned schedules are designed to keep off the slow trunks. On a
-``torus`` with a dft generator the ``butterfly-remap`` row is the
-Gray-relabeled butterfly whose partners are torus neighbors
-(``topo.remap_digits``).
+level-aligned schedules are designed to keep off the slow trunks.
 
 ``--emit-ir`` additionally prints the chosen algorithm's compiled
 ScheduleIR: every communication round (port, transfers, elements per
 message, example src→dst pairs with their slot selectors) and every local
 contraction — the exact schedule the simulator interprets and
 ``dist.collectives.ir_encode_jit`` executes.
+
+``--pipeline NAME`` applies one named pass pipeline from the
+``topo.passes.PIPELINES`` registry to the cheapest base candidate it
+applies to and prints the before/after α-β price plus the rewritten IR —
+the single-pipeline view of what the autotuner enumerates.
 """
 
 from __future__ import annotations
@@ -41,7 +47,7 @@ import argparse
 
 from repro.core.encode import default_q_for
 from repro.core.ir import CommRound, round_port_groups
-from repro.topo import autotune, make_topology
+from repro.topo import PIPELINES, autotune, ir_time, make_topology
 
 
 def emit_ir(ir, max_pairs: int = 4) -> str:
@@ -88,7 +94,7 @@ def main() -> None:
     ap.add_argument(
         "--topology",
         default="two-level",
-        choices=("flat", "ring", "torus", "two-level", "hierarchy"),
+        choices=("flat", "ring", "torus", "torus3d", "two-level", "hierarchy"),
     )
     ap.add_argument(
         "--intra", type=int, default=None, help="fast-domain size (torus/two-level)"
@@ -109,6 +115,13 @@ def main() -> None:
         help="print the chosen algorithm's compiled ScheduleIR "
         "(rounds, transfers, slot selectors, local contractions)",
     )
+    ap.add_argument(
+        "--pipeline",
+        default=None,
+        choices=sorted(PIPELINES),
+        help="apply one named pass pipeline to the cheapest base candidate "
+        "it applies to; print before/after α-β price and the rewritten IR",
+    )
     args = ap.parse_args()
 
     q = args.q or default_q_for(args.K, args.p)
@@ -125,11 +138,12 @@ def main() -> None:
         f"K={args.K} p={args.p} payload={args.payload_bytes}B "
         f"topology={topo.name}{extra} generator={args.generator} q={q}"
     )
-    print(f"{'algorithm':<18}{'C1':>4}{'C2':>5}{'time':>12}{'contention':>12}")
+    w = max(28, max(len(c.algorithm) for c in result.candidates) + 2)
+    print(f"{'algorithm':<{w}}{'C1':>4}{'C2':>5}{'time':>12}{'contention':>12}")
     for c in result.candidates:
         mark = " ←" if c is result.chosen else ""
         print(
-            f"{c.algorithm:<18}{c.c1:>4}{c.c2:>5}"
+            f"{c.algorithm:<{w}}{c.c1:>4}{c.c2:>5}"
             f"{c.predicted_time * 1e6:>10.2f}µs{c.estimate.max_contention:>12}{mark}"
         )
     ch = result.chosen
@@ -140,6 +154,29 @@ def main() -> None:
     if args.emit_ir:
         print()
         print(emit_ir(ch.ir))
+    if args.pipeline:
+        pl = PIPELINES[args.pipeline]
+        base = next(
+            (
+                c
+                for c in result.candidates
+                if not c.pipeline and pl.applicable(c.ir, topo)
+            ),
+            None,
+        )
+        print()
+        if base is None:
+            print(f"pipeline {pl.name!r}: not applicable to any candidate here")
+            return
+        pay = max(1, args.payload_bytes // 4)
+        rewritten = pl.apply(base.ir, topo, pay)
+        t0, t1 = ir_time(base.ir, topo, pay), ir_time(rewritten, topo, pay)
+        note = " (no rewrite: already optimal)" if rewritten is base.ir else ""
+        print(
+            f"pipeline {pl.name!r} on {base.algorithm}: "
+            f"{t0 * 1e6:.2f}µs → {t1 * 1e6:.2f}µs{note}"
+        )
+        print(emit_ir(rewritten))
 
 
 if __name__ == "__main__":

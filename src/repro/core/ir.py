@@ -278,6 +278,58 @@ def relabel(ir: ScheduleIR, perm) -> ScheduleIR:
     return replace(ir, steps=tuple(steps), placement=tuple(int(v) for v in perm[old]))
 
 
+def round_writes(rnd: CommRound) -> set:
+    """(processor, slot) pairs a round's deliveries write."""
+    return {(t.dst, ds) for t in rnd.transfers for _, ds in t.slots}
+
+
+def round_reads(rnd: CommRound) -> set:
+    """(processor, slot) pairs a round's sends read."""
+    return {(t.src, ss) for t in rnd.transfers for ss, _ in t.slots}
+
+
+def round_hazard_free(rnd: CommRound) -> bool:
+    """True when no transfer reads a (processor, slot) that any delivery of
+    the same round writes. Synchronous semantics make the round's result
+    order-independent across sub-round boundaries exactly in this case, so a
+    hazard-free round may be split into sub-rounds (each send still reads the
+    value it read before) without changing the computed function."""
+    return not (round_writes(rnd) & round_reads(rnd))
+
+
+def merge_comm_rounds(a: CommRound, b: CommRound, p: int) -> CommRound | None:
+    """Merge two adjacent rounds into one, or return None when the merge
+    would change semantics or break the p-port model. Legal iff:
+
+    * no RAW hazard — nothing ``b`` sends reads a slot ``a`` delivers into
+      at the sender (in the merged round b's sends read the PRE-round buffer,
+      while originally they read the post-``a`` buffer);
+    * no (src, dst) pair repeats across the two rounds;
+    * per-processor send and receive counts of the union stay ≤ p.
+
+    ``b``'s ports are retagged past ``a``'s so port groups (and hence the
+    executor's ppermute count) are preserved; delivery order (a's transfers
+    first) matches the original two-round order, so store/add overwrite
+    semantics at shared destination slots are unchanged."""
+    if round_reads(b) & round_writes(a):
+        return None
+    pairs = [(t.src, t.dst) for t in a.transfers] + [
+        (t.src, t.dst) for t in b.transfers
+    ]
+    if len(set(pairs)) != len(pairs):
+        return None
+    sends: dict = {}
+    recvs: dict = {}
+    for s, d in pairs:
+        sends[s] = sends.get(s, 0) + 1
+        recvs[d] = recvs.get(d, 0) + 1
+    if max(sends.values()) > p or max(recvs.values()) > p:
+        return None
+    off = max(t.port for t in a.transfers)
+    retagged = tuple(replace(t, port=t.port + off) for t in b.transfers)
+    return CommRound(a.transfers + retagged)
+
+
 # ---------------------------------------------------------------------------
 # subgroup embedding (draw-loose, two-level/multi-level DFT stages)
 # ---------------------------------------------------------------------------

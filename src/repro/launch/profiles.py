@@ -104,24 +104,62 @@ def _params_fit_without_fsdp(cfg: ModelConfig) -> bool:
 # ---------------------------------------------------------------------------
 
 
+#: checkpoint generator-matrix kind → the autotuner's generator taxonomy
+#: (which structured candidate families are applicable). The production
+#: coded-checkpoint parity plan uses a Cauchy matrix (``coded.rs_checkpoint``)
+#: — an unstructured MDS generator, hence "general".
+_GENERATOR_TAXONOMY = {
+    "cauchy": "general",
+    "random": "general",
+    "general": "general",
+    "vandermonde": "vandermonde",
+    "dft": "dft",
+}
+
+#: the matrix kind ``coded.rs_checkpoint.ParityPlan`` actually builds
+CHECKPOINT_GENERATOR_KIND = "cauchy"
+
+
+def generator_kind_for(matrix_kind: str) -> str:
+    """Map a generator-matrix kind (what the caller builds, e.g. the
+    checkpoint layer's Cauchy matrix) to the autotuner's generator taxonomy
+    ∈ {general, vandermonde, dft} — which structured schedule families may
+    be enumerated for it."""
+    try:
+        return _GENERATOR_TAXONOMY[matrix_kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown generator matrix kind {matrix_kind!r}; "
+            f"expected one of {sorted(_GENERATOR_TAXONOMY)}"
+        ) from None
+
+
 @dataclass(frozen=True)
 class EncodeProfile:
     """Autotuned encode selection for the coded-checkpoint DP axis.
 
-    ``algorithm`` ∈ {prepare-shoot, hierarchical, multilevel, ring,
-    allgather}; ``plan`` is the matching compile-time schedule plan (None for
-    the plan-less allgather); ``levels`` the innermost-first hierarchy the
-    choice was priced on — also the level sizes ``multilevel_encode_jit``
-    expects its mesh axes (reversed) to have. The selection is made over
-    priced ScheduleIRs (the autotuner enumerates ``plan.to_ir()`` compiles);
-    ``ir`` is the chosen candidate's compiled schedule — the exact object
+    ``algorithm`` is the chosen candidate's full name — a plan family
+    (prepare-shoot, hierarchical, multilevel, ring, allgather, …) optionally
+    suffixed ``+<pipeline>`` when a pass pipeline's rewrite won on price;
+    ``pipeline`` is that pipeline's registry name ("" = un-rewritten).
+    ``plan`` is the matching compile-time schedule plan (None for the
+    plan-less allgather); ``levels`` the innermost-first hierarchy the choice
+    was priced on — also the level sizes ``multilevel_encode_jit`` expects
+    its mesh axes (reversed) to have. The selection is made over priced
+    ScheduleIRs (the autotuner enumerates ``plan.to_ir()`` compiles ×
+    applicable ``topo.passes`` pipelines); ``ir`` is the chosen candidate's
+    compiled, pass-rewritten schedule — the exact object
     ``dist.collectives.ir_encode_jit`` executes (structure-only here: the
-    executors recompile with the generator matrix at dispatch)."""
+    executors recompile with the generator matrix at dispatch and re-apply
+    the named pipeline). ``fitted_costs`` records the calibrated per-level
+    α/β the pricing used (None = v5e defaults)."""
 
     topology: object  # repro.topo Topology the choice was priced on
     algorithm: str
     plan: object
     tune: object  # full repro.topo.TuneResult (candidate table)
+    pipeline: str = ""  # winning PassPipeline name ("" = un-rewritten)
+    fitted_costs: tuple | None = None  # calibrated LinkCosts used for pricing
 
     @property
     def levels(self) -> tuple[int, ...]:
@@ -141,6 +179,8 @@ def resolve_profile(
     p: int = 1,
     q: int | None = None,
     measured: dict[str, float] | None = None,
+    generator: str | None = None,
+    calibration: str | bool | None = None,
 ) -> EncodeProfile:
     """Pick the coded-checkpoint DP-axis encode algorithm from the mesh
     topology via the autotuner (ROADMAP: "wire the autotuner into launch/").
@@ -152,10 +192,26 @@ def resolve_profile(
     from a live mesh instead. ``measured`` feeds wall-clock calibration
     (e.g. ``results/BENCH_topology.json``'s ``measured_s``) through
     ``autotune(..., measured=...)``.
-    """
+
+    ``generator`` is the autotuner taxonomy kind; when omitted it defaults
+    from the checkpoint layer's actual generator matrix kind (Cauchy →
+    "general") via :func:`generator_kind_for` — callers with structured
+    generators pass ``generator=generator_kind_for("vandermonde")`` etc. to
+    unlock the structured candidate families.
+
+    ``calibration`` selects fitted α/β pricing: ``None`` (default) loads
+    ``results/BENCH_topology.json`` when present, a path loads that file,
+    ``False`` disables calibration. When fitted per-level costs exist and
+    the priced topology is a Hierarchy, its level costs are replaced by the
+    fit (level counts matching exactly, otherwise the fitted innermost/
+    outermost endpoints re-interpolated through
+    ``topo.model.default_level_costs``) so candidate prices — and the chosen
+    (algorithm, pipeline) — reflect measured hardware."""
     from repro.core.field import M31
     from repro.launch.mesh import production_topology, topology_for_mesh
     from repro.topo import autotune
+    from repro.topo.calibrate import load_fitted_costs
+    from repro.topo.model import Hierarchy, default_level_costs
 
     if mesh is not None:
         if axes is None:
@@ -163,13 +219,35 @@ def resolve_profile(
         topo = topology_for_mesh(mesh, axes)
     else:
         topo = production_topology(multi_pod=multi_pod)
+    fitted = None
+    if calibration is not False:
+        fitted = load_fitted_costs(
+            calibration if isinstance(calibration, str) else None
+        )
+    if fitted is not None and isinstance(topo, Hierarchy):
+        from dataclasses import replace as _replace
+
+        if len(fitted) == len(topo.levels):
+            topo = _replace(topo, costs=fitted)
+        else:
+            topo = _replace(
+                topo,
+                costs=default_level_costs(
+                    len(topo.levels), lo=fitted[0], hi=fitted[-1]
+                ),
+            )
+        fitted = topo.costs
+    else:
+        fitted = None
     result = autotune(
         topo.n,
         p,
         payload_bytes,
         topo,
         q=q if q is not None else M31,
-        generator="general",
+        generator=generator
+        if generator is not None
+        else generator_kind_for(CHECKPOINT_GENERATOR_KIND),
         measured=measured,
     )
     return EncodeProfile(
@@ -177,4 +255,6 @@ def resolve_profile(
         algorithm=result.algorithm,
         plan=result.chosen.plan,
         tune=result,
+        pipeline=result.chosen.pipeline,
+        fitted_costs=fitted,
     )

@@ -11,17 +11,25 @@
 #                    encode (K = Π K_j), Cooley–Tukey two-level AND
 #                    multi-level DFT, ring-optimized schedule — all compiled
 #                    to ScheduleIR and simulated by core.simulator.interpret
-# - passes.py        topology-aware IR rewrites (remap_digits: torus-native
-#                    butterfly via per-dimension Gray relabeling)
-# - calibrate.py     least-squares per-level α/β from measured sweeps
+# - passes.py        the pass-pipeline optimizer: named, composable IR
+#                    rewrites with applicability predicates (remap_digits,
+#                    split_contended, fuse_rounds, align_subgroups) and the
+#                    PassPipeline registry the autotuner enumerates
+# - calibrate.py     least-squares per-level α/β from measured sweeps +
+#                    load_fitted_costs (persisted calibration → LinkCosts)
 # - autotune.py      per-(K, p, payload, topology) selection by enumerating
-#                    and pricing ScheduleIRs, with a measured-override hook
+#                    and pricing (algorithm, pipeline) ScheduleIR candidates,
+#                    with a measured-override hook
 #
 # The ONE mesh executor for any IR is dist/collectives.ir_encode_jit; the
 # per-algorithm *_encode_jit entry points dispatch through it.
 
 from .autotune import Candidate, TuneResult, autotune, candidates_for  # noqa: F401
-from .calibrate import fit_level_costs, round_features  # noqa: F401
+from .calibrate import (  # noqa: F401
+    fit_level_costs,
+    load_fitted_costs,
+    round_features,
+)
 from .hierarchical import (  # noqa: F401
     HierarchicalPlan,
     MultiLevelDFTPlan,
@@ -56,10 +64,23 @@ from .model import (  # noqa: F401
     TimeEstimate,
     Topology,
     Torus2D,
+    Torus3D,
     TwoLevel,
     default_level_costs,
     default_levels,
     make_topology,
     schedule_time,
 )
-from .passes import max_round_hops, remap_digits  # noqa: F401
+from .passes import (  # noqa: F401
+    PASSES,
+    PIPELINES,
+    Pass,
+    PassPipeline,
+    align_subgroups,
+    fuse_rounds,
+    ir_time,
+    max_round_hops,
+    pipelines_for,
+    remap_digits,
+    split_contended,
+)

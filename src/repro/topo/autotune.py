@@ -16,15 +16,23 @@ Applicability matrix (the "universal promise" vs. structured generators):
 
 * ``general``      — prepare-shoot, hierarchical, multilevel, allgather, ring
 * ``vandermonde``  — the above + draw-loose
-* ``dft``          — all of the above + butterfly (+ its torus-remapped
-  variant) + two-level and multi-level DFT
+* ``dft``          — all of the above + butterfly + two-level and
+  multi-level DFT
+
+A candidate is an **(algorithm, pipeline)** pair: beyond the un-rewritten
+compile of every applicable plan, the tuner asks the pass registry
+(``topo.passes.pipelines_for``) which :class:`~repro.topo.passes.PassPipeline`
+applies to each compiled IR, applies it, prices the rewritten IR, and ranks
+everything together. A pipelined candidate is named
+``"<algorithm>+<pipeline>"`` (e.g. ``"butterfly+remap-digits"`` on a torus,
+``"draw-loose+align-subgroups"`` on a hierarchy — the ROADMAP's
+hierarchical draw-loose is exactly that pipeline stage, not a separate
+algorithm family) and records the pipeline name in ``Candidate.pipeline``.
 
 The ``multilevel`` / ``multilevel-dft`` candidates appear when the topology
 is a :class:`~repro.topo.model.Hierarchy` whose level product matches K: the
 plan factorization is taken from the topology itself, so the schedule's
-phases align with the hardware's levels by construction. The
-``butterfly-remap`` candidate appears on a :class:`Torus2D`: the
-``topo.passes.remap_digits`` rewrite whose partners are torus neighbors.
+phases align with the hardware's levels by construction.
 
 A ``measured`` override hook replaces predicted times with wall-clock
 numbers (e.g. from benchmarks/bench_topology.py) without changing the
@@ -62,7 +70,6 @@ GENERATOR_KINDS = ("general", "vandermonde", "dft")
 # multi-level equivalents
 _PREFERENCE = (
     "butterfly",
-    "butterfly-remap",
     "hierarchical-dft",
     "multilevel-dft",
     "draw-loose",
@@ -74,14 +81,26 @@ _PREFERENCE = (
 )
 
 
+def _preference_rank(base_algorithm: str) -> int:
+    """Tie-break rank; unknown names (plugins, renamed families) sort last
+    instead of raising — the historical ``_PREFERENCE.index`` blew up with
+    ValueError on any name outside the hardcoded tuple."""
+    try:
+        return _PREFERENCE.index(base_algorithm)
+    except ValueError:
+        return len(_PREFERENCE)
+
+
 @dataclass(frozen=True)
 class Candidate:
-    algorithm: str
+    algorithm: str  # full name: "<base>" or "<base>+<pipeline>"
     plan: object  # schedule plan (None for the plan-less allgather baseline)
     ir: ScheduleIR  # the compiled (and pass-rewritten) schedule
     lowered: LoweredSchedule
     estimate: TimeEstimate
     measured_time: float | None = None
+    pipeline: str = ""  # PassPipeline name; "" = un-rewritten compile
+    base_algorithm: str = ""  # plan family name without the pipeline suffix
 
     @property
     def c1(self) -> int:
@@ -141,14 +160,13 @@ def candidates_for(
     payload_elems: int = 1,
     generator: str = "general",
     seed: int = 0,
+    pipelines: bool = True,
 ) -> list[Candidate]:
     if generator not in GENERATOR_KINDS:
         raise ValueError(f"generator must be one of {GENERATOR_KINDS}")
 
-    def cand(plan, ir=None, algorithm=None):
+    def cand(plan, ir=None):
         ir = fuse_trivial_rounds(ir if ir is not None else plan.to_ir())
-        if algorithm is not None:
-            ir = replace(ir, algorithm=algorithm)
         low = lower_ir(ir)
         return Candidate(
             algorithm=low.algorithm,
@@ -156,6 +174,7 @@ def candidates_for(
             ir=ir,
             lowered=low,
             estimate=low.time(topo, payload_elems),
+            base_algorithm=low.algorithm,
         )
 
     out = [
@@ -175,25 +194,10 @@ def candidates_for(
         except (ValueError, RuntimeError):
             pass  # field too small / no valid phi — not applicable
     if generator == "dft":
-        bf = None
         try:
-            bf = plan_butterfly(K, p, q)
-            out.append(cand(bf))
+            out.append(cand(plan_butterfly(K, p, q)))
         except ValueError:
             pass  # K not a power of p+1 or K ∤ q-1
-        if bf is not None and isinstance(topo, Torus2D) and topo.n == K:
-            try:
-                from .passes import remap_digits
-
-                out.append(
-                    cand(
-                        bf,
-                        ir=remap_digits(bf.to_ir(), topo),
-                        algorithm="butterfly-remap",
-                    )
-                )
-            except ValueError:
-                pass  # torus dims not powers of the radix
         for ki in dict.fromkeys((k_intra, _dft_split(K, p))):
             if ki is None or not (1 < ki < K):
                 continue
@@ -207,6 +211,45 @@ def candidates_for(
                 out.append(cand(plan_multilevel_dft(K, p, q, levels)))
             except ValueError:
                 pass  # levels not powers of p+1 or K ∤ q-1
+    if pipelines:
+        out += _pipeline_candidates(out, topo, payload_elems)
+    return out
+
+
+def _pipeline_candidates(
+    base: list[Candidate], topo: Topology, payload_elems: int
+) -> list[Candidate]:
+    """One extra candidate per (base candidate, applicable pipeline) whose
+    rewrite actually changed the IR — the (algorithm, pipeline) half of the
+    search space. The base plan is kept so downstream consumers (profiles,
+    mesh executors) can recompile ``plan.to_ir(A)`` and re-apply the named
+    pipeline with coefficients baked in."""
+    from .passes import pipelines_for
+
+    out = []
+    for c in base:
+        for pl in pipelines_for(c.ir, topo):
+            try:
+                rewritten = pl.apply(c.ir, topo, payload_elems)
+            except ValueError:
+                continue  # predicate passed but the rewrite found no embedding
+            if rewritten is c.ir:
+                continue  # no-op on this IR — pricing it would duplicate base
+            rewritten = replace(
+                rewritten, algorithm=f"{c.base_algorithm}+{pl.name}"
+            )
+            low = lower_ir(rewritten)
+            out.append(
+                Candidate(
+                    algorithm=rewritten.algorithm,
+                    plan=c.plan,
+                    ir=rewritten,
+                    lowered=low,
+                    estimate=low.time(topo, payload_elems),
+                    pipeline=pl.name,
+                    base_algorithm=c.base_algorithm,
+                )
+            )
     return out
 
 
@@ -231,17 +274,36 @@ def autotune(
     generator: str = "general",
     measured: dict[str, float] | None = None,
     seed: int = 0,
+    pipelines: bool = True,
 ) -> TuneResult:
-    """Pick the cheapest applicable algorithm for this scenario. ``measured``
-    maps algorithm name → measured seconds, overriding the α-β prediction."""
+    """Pick the cheapest applicable (algorithm, pipeline) pair for this
+    scenario. ``measured`` maps full candidate name → measured seconds,
+    overriding the α-β prediction."""
     payload_elems = max(1, payload_bytes // 4)
     cands = candidates_for(
-        K, p, topo, q=q, payload_elems=payload_elems, generator=generator, seed=seed
+        K,
+        p,
+        topo,
+        q=q,
+        payload_elems=payload_elems,
+        generator=generator,
+        seed=seed,
+        pipelines=pipelines,
     )
     if measured:
         cands = [
             replace(c, measured_time=measured.get(c.algorithm, c.measured_time))
             for c in cands
         ]
-    ranked = sorted(cands, key=lambda c: (c.time, _PREFERENCE.index(c.algorithm)))
+    # ties: any un-rewritten compile before any pipelined rewrite (a pipeline
+    # must strictly win on price to be chosen), then the preferred family
+    ranked = sorted(
+        cands,
+        key=lambda c: (
+            c.time,
+            c.pipeline != "",
+            _preference_rank(c.base_algorithm or c.algorithm),
+            c.pipeline,
+        ),
+    )
     return TuneResult(chosen=ranked[0], candidates=tuple(ranked))

@@ -42,10 +42,19 @@ from dataclasses import dataclass
 @dataclass(frozen=True)
 class LinkCost:
     """Per-link α-β parameters: ``alpha`` seconds of per-message startup,
-    ``beta`` seconds per field element crossing the link."""
+    ``beta`` seconds per field element crossing the link.
+
+    ``gamma`` is an optional contention-degradation factor: when ``cnt``
+    messages share the link in one round, the bandwidth term is inflated to
+    ``elems·beta·(1 + gamma·(cnt − 1))`` — serialization overhead (packet
+    interleaving, credit stalls) that grows with the number of concurrent
+    flows. The default ``gamma = 0`` keeps the purely additive Hockney model,
+    under which splitting a round can never strictly win (max is subadditive);
+    a fabric with ``gamma > 0`` is what makes ``split_contended`` profitable."""
 
     alpha: float
     beta: float
+    gamma: float = 0.0
 
 
 # Defaults mirror core.bounds.CostModel: v5e ICI ≈ 1 µs startup, one uint32
@@ -153,6 +162,48 @@ class Torus2D(Topology):
             links.append(("x", sr, u, v))
         for tag, u, v in _ring_route(self.rows, sr, dr, "y"):
             links.append(("y", dc, u, v))
+        return tuple(links)
+
+    def link_cost(self, link):
+        return self.cost
+
+
+@dataclass(frozen=True)
+class Torus3D(Topology):
+    """depth × rows × cols torus (a TPU-style 3D mesh with wraparound) with
+    dimension-ordered x → y → z routing; processor k = (z·rows + r)·cols + c.
+    Links are per-ring, keyed by the fixed coordinates of the ring they sit
+    on, so two messages moving along the same physical wire contend."""
+
+    depth: int
+    rows: int
+    cols: int
+    cost: LinkCost = ICI
+    name: str = "torus3d"
+
+    @property
+    def n(self):  # type: ignore[override]
+        return self.depth * self.rows * self.cols
+
+    def coords(self, k: int) -> tuple[int, int, int]:
+        zr, c = divmod(k, self.cols)
+        z, r = divmod(zr, self.rows)
+        return z, r, c
+
+    def route(self, src, dst):
+        if src == dst:
+            return ()
+        sz, sr, sc = self.coords(src)
+        dz, dr, dc = self.coords(dst)
+        links = []
+        # x (column index) at fixed (z=sz, r=sr), then y at (z=sz, c=dc),
+        # then z at (r=dr, c=dc) — dimension-ordered, deadlock-free
+        for tag, u, v in _ring_route(self.cols, sc, dc, "x"):
+            links.append(("x", sz, sr, u, v))
+        for tag, u, v in _ring_route(self.rows, sr, dr, "y"):
+            links.append(("y", sz, dc, u, v))
+        for tag, u, v in _ring_route(self.depth, sz, dz, "z"):
+            links.append(("z", dr, dc, u, v))
         return tuple(links)
 
     def link_cost(self, link):
@@ -320,7 +371,8 @@ def schedule_time(
         t = 0.0
         for link, (cnt, elems) in loads.items():
             c = topo.link_cost(link)
-            t = max(t, cnt * c.alpha + elems * payload_elems * c.beta)
+            bw = elems * payload_elems * c.beta * (1.0 + c.gamma * (cnt - 1))
+            t = max(t, cnt * c.alpha + bw)
             max_cont = max(max_cont, cnt)
             max_load = max(max_load, elems)
         per_round.append(t)
@@ -341,9 +393,11 @@ def make_topology(
     intra: LinkCost = ICI,
     inter: LinkCost = DCI,
 ) -> Topology:
-    """Factory for the CLI / autotuner: name ∈ {flat, ring, torus, two-level,
-    hierarchy}. ``hierarchy`` takes ``levels`` (innermost → outermost,
-    Π levels = K; default: balanced three-level split of K)."""
+    """Factory for the CLI / autotuner: name ∈ {flat, ring, torus, torus3d,
+    two-level, hierarchy}. ``hierarchy`` takes ``levels`` (innermost →
+    outermost, Π levels = K; default: balanced three-level split of K);
+    ``torus3d`` reuses ``levels`` as (cols, rows, depth) dims (default:
+    balanced factorization)."""
     if name == "flat":
         return FullyConnected(K, cost=intra)
     if name == "ring":
@@ -353,6 +407,14 @@ def make_topology(
         if K % rows:
             raise ValueError(f"torus needs rows | K, got rows={rows}, K={K}")
         return Torus2D(rows, K // rows, cost=intra)
+    if name == "torus3d":
+        dims = tuple(levels) if levels else default_levels(K, 3)
+        if len(dims) != 3:
+            raise ValueError(f"torus3d needs 3 dims, got {dims}")
+        cols, rows, depth = dims
+        if cols * rows * depth != K:
+            raise ValueError(f"torus3d needs Π dims = K: {dims} vs K={K}")
+        return Torus3D(depth=depth, rows=rows, cols=cols, cost=intra)
     if name == "two-level":
         ki = k_intra or _near_square(K)
         if K % ki:

@@ -1,36 +1,87 @@
-"""Topology-aware ScheduleIR rewrite passes.
+"""Topology-aware ScheduleIR rewrite passes + the :class:`PassPipeline`
+optimizer.
+
+PR 4 unified every encode algorithm on one ScheduleIR; this module turns the
+rewrite layer into a real optimizer. A :class:`Pass` is a named
+``(ScheduleIR, Topology) -> ScheduleIR`` rewrite with an applicability
+predicate; a :class:`PassPipeline` is a named composition of passes. The
+autotuner (``topo.autotune``) enumerates every applicable pipeline per
+compiled IR, prices the rewritten IR with the α-β estimator (fitted α/β when
+calibration exists — see ``topo.calibrate.load_fitted_costs``), and records
+the winning (algorithm, pipeline) pair.
+
+Every pass is **exact**: the rewritten IR computes the same encode function,
+proven against the oracle interpreter for every registered pipeline × every
+algorithm family in ``tests/test_ir.py``. Exactness comes from construction:
+
+* :func:`remap_digits` / :func:`align_subgroups` only relabel the machine
+  (:func:`repro.core.ir.relabel` composes ``placement`` so logical
+  inputs/outputs stay put);
+* :func:`split_contended` only splits rounds proven hazard-free
+  (:func:`repro.core.ir.round_hazard_free`) along port-group boundaries —
+  every send still reads the value it read before, and the executor's
+  ppermute count is preserved;
+* :func:`fuse_rounds` only merges adjacent rounds when
+  :func:`repro.core.ir.merge_comm_rounds` proves no read-after-write hazard,
+  no duplicate (src, dst) pair, and the p-port budget holds.
+
+Price-guarded passes (split, fuse, align) return the input IR unchanged when
+no rewrite strictly improves the α-β price — under the default ``gamma = 0``
+link model splitting can never win (max is subadditive), so
+``split_contended`` only fires on fabrics whose :class:`~repro.topo.model.LinkCost`
+carries a contention-degradation ``gamma > 0``.
 
 :func:`remap_digits` is the torus-native butterfly from the ROADMAP: the
-radix-(p+1) butterfly's digit-t partners sit at stride (p+1)^t, so on a 2D
-torus the plain schedule pays multi-hop routes and link contention.
-``topo/lower.py`` only *prices* that contention; this pass actually
-reshuffles the schedule — it chooses a digit→mesh-dimension assignment and a
-per-dimension cyclic Gray relabeling so that every round's partner exchange
-runs between torus neighbors, then relabels the whole IR with
-:func:`repro.core.ir.relabel` (the ``placement`` metadata keeps logical
-inputs/outputs in place).
-
-Why Gray codes: a ring of size radix² admits a cyclic radix-ary Gray
-labeling in which incrementing EITHER digit moves to a ring neighbor (for
-radix 2 this is the classic reflected Gray code on the 4-cycle: bit-0 flips
-use edges {0-1, 2-3}, bit-1 flips use {1-2, 3-0}). Rings of size radix are
-trivially neighbor-complete for radix ≤ 3. Hence for p = 1 every 2D torus
-whose dimensions are 2 or 4 (e.g. 2×4 for K = 8, 4×4 for K = 16) gets a
-hop-count-1 embedding for EVERY round — asserted in tests/test_ir.py. For
-larger dimensions no dilation-1 embedding exists (a d-cube has d·2^{d-1}
-edges, a 2^d-ring only 2^d), so the pass picks the assignment minimizing
-total hops and lets the α-β price decide whether it wins.
+radix-(p+1) butterfly's digit-t partners sit at stride (p+1)^t, so on a torus
+the plain schedule pays multi-hop routes and link contention. The pass picks
+a digit→mesh-dimension assignment and a per-dimension cyclic Gray relabeling
+so partner exchanges run between torus neighbors. Why Gray codes: a ring of
+size radix² admits a cyclic radix-ary Gray labeling in which incrementing
+EITHER digit moves to a ring neighbor (for radix 2 the classic reflected
+Gray code on the 4-cycle). Rings of size radix are trivially
+neighbor-complete for radix ≤ 3. Hence for p = 1 every torus whose
+dimensions are 2 or 4 (e.g. 2×4 for K = 8, 4×4 for K = 16, 2×2×2 for K = 8
+on a 3D torus) gets a hop-count-1 embedding for EVERY round — asserted in
+tests/test_ir.py. For larger dimensions no dilation-1 embedding exists (a
+d-cube has d·2^{d-1} edges, a 2^d-ring only 2^d), so the pass minimizes
+total hops and lets the α-β price decide whether it wins. When the torus
+dims are powers of 2 but not powers of the radix (and the radix itself is a
+power of 2), the pass re-expresses the radix-(p+1) digits as binary digits
+first — a radix-4 butterfly then embeds on a binary torus at ≤ 2 hops per
+partner instead of not at all.
 """
 
 from __future__ import annotations
 
+import warnings
+from dataclasses import dataclass
 from itertools import combinations
+from math import comb
+from typing import Callable
 
 import numpy as np
 
-from repro.core.ir import ScheduleIR, relabel
+from repro.core.ir import (
+    CommRound,
+    ScheduleIR,
+    ir_messages,
+    merge_comm_rounds,
+    relabel,
+    round_hazard_free,
+)
 
-from .model import Torus2D
+from .model import Hierarchy, Topology, Torus2D, Torus3D, TwoLevel, schedule_time
+
+
+def ir_time(ir: ScheduleIR, topo: Topology, payload_elems: int = 1) -> float:
+    """α-β price of an IR on a topology (seconds) — the objective every
+    price-guarded pass and the autotuner optimize."""
+    return schedule_time(topo, ir_messages(ir), payload_elems).total
+
+
+# ---------------------------------------------------------------------------
+# remap_digits: Gray-coded digit→dimension embedding for tori
+# ---------------------------------------------------------------------------
 
 
 def _gray_positions(n_digits: int, radix: int) -> np.ndarray:
@@ -58,19 +109,55 @@ def _digit_values(K: int, radix: int, digits) -> np.ndarray:
     return out
 
 
-def _embedding(K: int, radix: int, col_digits, row_digits, cols: int) -> np.ndarray:
-    """π: logical butterfly index → torus device r·cols + c, Gray-relabeled
-    per dimension."""
-    col_pos = _gray_positions(len(col_digits), radix)[
-        _digit_values(K, radix, col_digits)
-    ]
-    row_pos = _gray_positions(len(row_digits), radix)[
-        _digit_values(K, radix, row_digits)
-    ]
-    return row_pos * cols + col_pos
+def _torus_dims(topo) -> tuple[int, ...]:
+    """Torus dimension sizes, outermost → innermost, matching the device
+    index k = Horner(dims): Torus2D k = r·cols + c, Torus3D k = (z·rows +
+    r)·cols + c."""
+    if isinstance(topo, Torus3D):
+        return (topo.depth, topo.rows, topo.cols)
+    if isinstance(topo, Torus2D):
+        return (topo.rows, topo.cols)
+    raise TypeError("remap_digits targets Torus2D / Torus3D topologies")
 
 
-def _total_hops(ir: ScheduleIR, topo: Torus2D, perm: np.ndarray) -> int:
+def _remap_radix(ir: ScheduleIR, topo) -> tuple[int, int] | None:
+    """(radix, H) to run the digit embedding in, or None when the torus dims
+    don't decompose. Prefers the butterfly's own radix p+1; falls back to
+    binary digits when every dim is a power of 2 and so is the radix."""
+
+    def log_b(n, b):
+        h = 0
+        while b**h < n:
+            h += 1
+        return h if b**h == n else None
+
+    dims = _torus_dims(topo)
+    for radix in dict.fromkeys([ir.p + 1, 2]):
+        if radix < 2:
+            continue
+        if radix != ir.p + 1 and log_b(ir.p + 1, 2) is None:
+            continue  # binary re-expression needs the radix to be a 2-power
+        per_dim = [log_b(d, radix) for d in dims]
+        if any(h is None for h in per_dim):
+            continue
+        H = sum(per_dim)
+        if radix**H == ir.K:
+            return radix, H
+    return None
+
+
+def _embedding(K: int, radix: int, assignment, dims) -> np.ndarray:
+    """π: logical index → torus device, Gray-relabeled per dimension.
+    ``assignment`` lists the digit positions owned by each dim (outermost →
+    innermost, matching ``dims``)."""
+    dev = np.zeros(K, dtype=np.int64)
+    for digits, size in zip(assignment, dims):
+        pos = _gray_positions(len(digits), radix)[_digit_values(K, radix, digits)]
+        dev = dev * size + pos
+    return dev
+
+
+def _total_hops(ir: ScheduleIR, topo, perm: np.ndarray) -> int:
     total = 0
     for r in ir.rounds():
         for t in r.transfers:
@@ -78,45 +165,102 @@ def _total_hops(ir: ScheduleIR, topo: Torus2D, perm: np.ndarray) -> int:
     return total
 
 
-def remap_digits(ir: ScheduleIR, topo: Torus2D) -> ScheduleIR:
-    """Rewrite a radix-(p+1) butterfly IR for a 2D torus: assign each digit
-    to a torus dimension (enumerating assignments, minimizing total hops)
-    and Gray-relabel each dimension's ring so digit increments land on
-    neighbors. Returns the relabeled IR (``placement`` set); exactness is
-    :func:`relabel`'s — the schedule is the same program on renamed
-    processors."""
-    if not isinstance(topo, Torus2D):
-        raise TypeError("remap_digits targets Torus2D topologies")
-    K, radix = ir.K, ir.p + 1
+def _assignments(H: int, sizes):
+    """All ways to partition digit positions 0..H−1 into per-dim groups of
+    the given sizes (outermost dim first)."""
+
+    def rec(remaining, sizes):
+        if not sizes:
+            yield ()
+            return
+        for chosen in combinations(remaining, sizes[0]):
+            rest = tuple(x for x in remaining if x not in chosen)
+            for tail in rec(rest, sizes[1:]):
+                yield (chosen,) + tail
+
+    yield from rec(tuple(range(H)), sizes)
+
+
+def _assignment_count(H: int, sizes) -> int:
+    out, rest = 1, H
+    for s in sizes:
+        out *= comb(rest, s)
+        rest -= s
+    return out
+
+
+def remap_digits(ir: ScheduleIR, topo, exhaustive_limit: int = 4096) -> ScheduleIR:
+    """Rewrite a digit-structured IR for a 2D/3D torus: assign each radix
+    digit to a torus dimension (minimizing total hops) and Gray-relabel each
+    dimension's ring so digit increments land on neighbors. Returns the
+    relabeled IR (``placement`` set); exactness is :func:`relabel`'s — the
+    same program on renamed processors. When the assignment space exceeds
+    ``exhaustive_limit``, falls back to a greedy swap search from the
+    contiguous assignment and warns that the search was bounded."""
+    dims = _torus_dims(topo)
+    K = ir.K
     if topo.n != K:
         raise ValueError(f"topology has {topo.n} processors, IR has {K}")
+    picked = _remap_radix(ir, topo)
+    if picked is None:
+        raise ValueError(
+            f"torus dims {dims} are not powers of radix {ir.p + 1} "
+            "(nor uniformly binary)"
+        )
+    radix, H = picked
 
-    def log_radix(n):
+    def log_r(n):
         h = 0
         while radix**h < n:
             h += 1
-        return h if radix**h == n else None
+        return h
 
-    a = log_radix(topo.rows)
-    b = log_radix(topo.cols)
-    if a is None or b is None:
-        raise ValueError(
-            f"torus dims ({topo.rows}, {topo.cols}) are not powers of radix {radix}"
+    sizes = tuple(log_r(d) for d in dims)
+
+    def hops_of(assignment):
+        return _total_hops(ir, topo, _embedding(K, radix, assignment, dims))
+
+    if _assignment_count(H, sizes) <= exhaustive_limit:
+        best = min(_assignments(H, sizes), key=hops_of)
+    else:
+        # Greedy fallback: contiguous start (innermost dim owns the lowest
+        # digits), then pairwise digit swaps across dims until no improvement.
+        warnings.warn(
+            f"remap_digits: {_assignment_count(H, sizes)} digit assignments "
+            f"exceed exhaustive_limit={exhaustive_limit}; using greedy swap "
+            "search — the embedding may be suboptimal",
+            RuntimeWarning,
+            stacklevel=2,
         )
-    H = a + b
-    if radix**H != K:
-        raise ValueError(f"K={K} is not radix^(rows·cols digits)")
-    best = None
-    digit_sets = (
-        combinations(range(H), b) if H <= 12 else [tuple(range(b))]
-    )
-    for col_digits in digit_sets:
-        row_digits = tuple(t for t in range(H) if t not in col_digits)
-        perm = _embedding(K, radix, col_digits, row_digits, topo.cols)
-        hops = _total_hops(ir, topo, perm)
-        if best is None or hops < best[0]:
-            best = (hops, perm)
-    return relabel(ir, best[1])
+        groups = []
+        nxt = 0
+        for s in reversed(sizes):  # innermost gets lowest digits
+            groups.append(list(range(nxt, nxt + s)))
+            nxt += s
+        groups = list(reversed(groups))
+        cur = hops_of(tuple(tuple(g) for g in groups))
+        improved = True
+        while improved:
+            improved = False
+            for i in range(len(groups)):
+                for j in range(i + 1, len(groups)):
+                    for a in range(len(groups[i])):
+                        for b in range(len(groups[j])):
+                            groups[i][a], groups[j][b] = groups[j][b], groups[i][a]
+                            h = hops_of(tuple(tuple(g) for g in groups))
+                            if h < cur:
+                                cur = h
+                                improved = True
+                            else:
+                                groups[i][a], groups[j][b] = (
+                                    groups[j][b],
+                                    groups[i][a],
+                                )
+        best = tuple(tuple(g) for g in groups)
+    perm = _embedding(K, radix, best, dims)
+    if np.array_equal(perm, np.arange(K)):
+        return ir  # identity embedding — nothing to rewrite
+    return relabel(ir, perm)
 
 
 def max_round_hops(ir: ScheduleIR, topo) -> int:
@@ -126,3 +270,301 @@ def max_round_hops(ir: ScheduleIR, topo) -> int:
         (topo.hops(t.src, t.dst) for r in ir.rounds() for t in r.transfers),
         default=0,
     )
+
+
+# ---------------------------------------------------------------------------
+# split_contended: stagger a round's port groups when contention is priced
+# ---------------------------------------------------------------------------
+
+
+def _topo_gammas(topo: Topology) -> list[float]:
+    costs = []
+    for attr in ("cost", "intra", "inter"):
+        c = getattr(topo, attr, None)
+        if c is not None:
+            costs.append(c.gamma)
+    if isinstance(topo, Hierarchy):
+        costs += [topo.level_cost(j).gamma for j in range(len(topo.levels))]
+    return costs
+
+
+def split_contended(
+    ir: ScheduleIR, topo: Topology, payload_elems: int = 1
+) -> ScheduleIR:
+    """Break a contended round into staggered sub-rounds when the α-β price
+    says the split wins. Splits ONLY along port-group boundaries (each group
+    is one ppermute, so the executor's ppermute count is preserved) and ONLY
+    rounds proven hazard-free, so every send still reads the value it read
+    before — exact by construction. Per round, a dynamic program over
+    contiguous group partitions picks the cheapest staggering; with the
+    default ``gamma = 0`` link model the single-segment partition is always
+    cheapest (max is subadditive) and the pass is a no-op."""
+    steps = []
+    changed = False
+    for step in ir.steps:
+        if not isinstance(step, CommRound):
+            steps.append(step)
+            continue
+        order: list = []
+        by_key: dict = {}
+        for t in step.transfers:
+            key = (t.port, t.slots, t.mode)
+            if key not in by_key:
+                by_key[key] = []
+                order.append(key)
+            by_key[key].append(t)
+        parts = [tuple(by_key[k]) for k in order]
+        g = len(parts)
+        if g < 2 or not round_hazard_free(step):
+            steps.append(step)
+            continue
+
+        def seg_cost(i, j):
+            msgs = {(t.src, t.dst): t.elems for part in parts[i:j] for t in part}
+            return schedule_time(topo, [msgs], payload_elems).total
+
+        best = [0.0] * (g + 1)
+        cut = [0] * (g + 1)
+        for j in range(1, g + 1):
+            best[j], cut[j] = min(
+                (best[i] + seg_cost(i, j), i) for i in range(j)
+            )
+        whole = seg_cost(0, g)
+        if best[g] >= whole * (1 - 1e-12):
+            steps.append(step)
+            continue
+        bounds = []
+        j = g
+        while j > 0:
+            bounds.append((cut[j], j))
+            j = cut[j]
+        for i, j in reversed(bounds):
+            steps.append(
+                CommRound(tuple(t for part in parts[i:j] for t in part))
+            )
+        changed = True
+    if not changed:
+        return ir
+    from dataclasses import replace as _replace
+
+    return _replace(ir, steps=tuple(steps))
+
+
+# ---------------------------------------------------------------------------
+# fuse_rounds: merge adjacent rounds within the p-port budget
+# ---------------------------------------------------------------------------
+
+
+def fuse_rounds(ir: ScheduleIR, topo: Topology, payload_elems: int = 1) -> ScheduleIR:
+    """Merge adjacent CommRounds (no LocalOp between) when
+    :func:`repro.core.ir.merge_comm_rounds` proves the merge legal (no RAW
+    hazard, no duplicate pair, p-port budget holds) and the α-β price does
+    not regress — cutting C1 by one α-charge per merge. Natural family IRs
+    are mostly data-dependent round-to-round (each gather/reduction reads
+    what the previous round delivered), so this pass chiefly re-packs the
+    output of :func:`split_contended` and hand-built schedules."""
+    out: list = []
+    changed = False
+    for step in ir.steps:
+        if isinstance(step, CommRound) and out and isinstance(out[-1], CommRound):
+            merged = merge_comm_rounds(out[-1], step, ir.p)
+            if merged is not None:
+                t_merged = schedule_time(
+                    topo, ir_messages_of_rounds([merged]), payload_elems
+                ).total
+                t_split = schedule_time(
+                    topo, ir_messages_of_rounds([out[-1], step]), payload_elems
+                ).total
+                if t_merged <= t_split * (1 + 1e-12):
+                    out[-1] = merged
+                    changed = True
+                    continue
+        out.append(step)
+    if not changed:
+        return ir
+    from dataclasses import replace as _replace
+
+    return _replace(ir, steps=tuple(out))
+
+
+def ir_messages_of_rounds(rounds) -> list[dict]:
+    """{(src, dst): elems} maps for bare CommRounds (no IR wrapper)."""
+    return [{(t.src, t.dst): t.elems for t in r.transfers} for r in rounds]
+
+
+# ---------------------------------------------------------------------------
+# align_subgroups: level-aligned stride relabeling for hierarchies
+# ---------------------------------------------------------------------------
+
+
+def align_subgroups(
+    ir: ScheduleIR, topo: Topology, payload_elems: int = 1
+) -> ScheduleIR:
+    """Relabel the machine by the stride↔block transpose that minimizes the
+    α-β price on a hierarchical fabric. The draw-loose plan's heavy draw
+    phase runs in stride-Z subgroups {j, j+Z, …} that a transpose
+    π(j + Z·a) = j·M + a turns into CONTIGUOUS groups — i.e. intra-domain on
+    a TwoLevel/Hierarchy — while the light loose butterflies move to the
+    slow trunks. This is the ROADMAP's hierarchical draw-loose collapsed
+    into a pipeline stage: same IR, level-aligned layout. The pass tries
+    every divisor transpose of K (both directions arise as Z ↔ M) plus
+    identity, prices each, and relabels only on strict improvement —
+    exactness is :func:`relabel`'s."""
+    K = ir.K
+    base = ir_messages(ir)
+    best_t = schedule_time(topo, base, payload_elems).total
+    best_perm = None
+    for Z in range(2, K):
+        if K % Z:
+            continue
+        M = K // Z
+        perm = np.empty(K, dtype=np.int64)
+        for j in range(Z):
+            for a in range(M):
+                perm[j + Z * a] = j * M + a
+        msgs = [
+            {(int(perm[s]), int(perm[d])): e for (s, d), e in rnd.items()}
+            for rnd in base
+        ]
+        t = schedule_time(topo, msgs, payload_elems).total
+        if t < best_t * (1 - 1e-12):
+            best_t, best_perm = t, perm
+    if best_perm is None:
+        return ir
+    return relabel(ir, best_perm)
+
+
+# ---------------------------------------------------------------------------
+# Pass / PassPipeline registry
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Pass:
+    """A named, exact ScheduleIR rewrite with an applicability predicate.
+    ``fn(ir, topo, payload_elems)`` returns the rewritten IR (the SAME object
+    when nothing changed); ``applies(ir, topo)`` is a cheap structural check
+    the autotuner uses to skip hopeless candidates."""
+
+    name: str
+    fn: Callable[[ScheduleIR, Topology, int], ScheduleIR]
+    applies: Callable[[ScheduleIR, Topology], bool]
+    doc: str = ""
+
+    def __call__(self, ir, topo, payload_elems: int = 1) -> ScheduleIR:
+        return self.fn(ir, topo, payload_elems)
+
+
+@dataclass(frozen=True)
+class PassPipeline:
+    """A named composition of passes, applied left to right. A pipeline is
+    applicable when every member pass is; applying it to an applicable IR is
+    exact because every member is."""
+
+    name: str
+    passes: tuple[Pass, ...]
+    doc: str = ""
+
+    def applicable(self, ir: ScheduleIR, topo: Topology) -> bool:
+        return all(p.applies(ir, topo) for p in self.passes)
+
+    def apply(self, ir: ScheduleIR, topo: Topology, payload_elems: int = 1):
+        for p in self.passes:
+            ir = p.fn(ir, topo, payload_elems)
+        return ir
+
+
+def _remap_applies(ir, topo) -> bool:
+    return (
+        isinstance(topo, (Torus2D, Torus3D))
+        and topo.n == ir.K
+        and _remap_radix(ir, topo) is not None
+    )
+
+
+def _split_applies(ir, topo) -> bool:
+    if not any(g > 0 for g in _topo_gammas(topo)):
+        return False  # additive model: splitting can never strictly win
+    return any(
+        len({(t.port, t.slots, t.mode) for t in r.transfers}) > 1
+        and round_hazard_free(r)
+        for r in ir.rounds()
+    )
+
+
+def _fuse_applies(ir, topo) -> bool:
+    prev_comm = False
+    for step in ir.steps:
+        if isinstance(step, CommRound):
+            if prev_comm:
+                return True
+            prev_comm = True
+        else:
+            prev_comm = False
+    return False
+
+
+def _align_applies(ir, topo) -> bool:
+    # Scoped to the draw-loose family: its draw phase runs in stride-Z
+    # subgroups that the transpose makes level-aligned (the ROADMAP's
+    # hierarchical draw-loose). Other families are either already
+    # level-aligned (hierarchical/multilevel compile FROM the hierarchy) or
+    # have no subgroup structure a transpose could exploit.
+    return (
+        isinstance(topo, (TwoLevel, Hierarchy))
+        and topo.n == ir.K
+        and ir.K > 3
+        and "draw-loose" in ir.algorithm
+    )
+
+
+PASSES: dict[str, Pass] = {
+    p.name: p
+    for p in [
+        Pass(
+            "remap-digits",
+            lambda ir, topo, pe=1: remap_digits(ir, topo),
+            _remap_applies,
+            doc="Gray-coded digit→torus-dimension relabeling (2D/3D, radix→2 fallback)",
+        ),
+        Pass(
+            "split-contended",
+            split_contended,
+            _split_applies,
+            doc="stagger a hazard-free round's port groups when γ-priced contention loses",
+        ),
+        Pass(
+            "fuse-rounds",
+            fuse_rounds,
+            _fuse_applies,
+            doc="merge adjacent hazard-free rounds within the p-port budget (cuts C1)",
+        ),
+        Pass(
+            "align-subgroups",
+            align_subgroups,
+            _align_applies,
+            doc="stride↔block transpose putting heavy subgroups on fast intra links",
+        ),
+    ]
+}
+
+PIPELINES: dict[str, PassPipeline] = {
+    pl.name: pl
+    for pl in [
+        PassPipeline("remap-digits", (PASSES["remap-digits"],)),
+        PassPipeline("split-contended", (PASSES["split-contended"],)),
+        PassPipeline("fuse-rounds", (PASSES["fuse-rounds"],)),
+        PassPipeline("align-subgroups", (PASSES["align-subgroups"],)),
+        PassPipeline(
+            "split+fuse",
+            (PASSES["split-contended"], PASSES["fuse-rounds"]),
+            doc="stagger contended rounds, then re-pack what still fits",
+        ),
+    ]
+}
+
+
+def pipelines_for(ir: ScheduleIR, topo: Topology) -> list[PassPipeline]:
+    """Every registered pipeline whose passes all apply to (ir, topo) — the
+    candidate set the autotuner prices."""
+    return [pl for pl in PIPELINES.values() if pl.applicable(ir, topo)]

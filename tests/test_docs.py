@@ -110,5 +110,14 @@ def test_public_topo_and_dist_api_is_documented():
         "remap_digits",
         "fit_level_costs",
         "plan_multilevel_dft",
+        # the pass-pipeline optimizer + calibrated pricing (PR 6)
+        "PassPipeline",
+        "pipelines_for",
+        "split_contended",
+        "fuse_rounds",
+        "align_subgroups",
+        "load_fitted_costs",
+        "generator_kind_for",
+        "Torus3D",
     ]:
         assert name in all_docs, f"public symbol {name} not mentioned in docs"

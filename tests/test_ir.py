@@ -44,10 +44,17 @@ from repro.core.schedule import (
 )
 from repro.core.simulator import interpret
 from repro.topo import (
+    PIPELINES,
     Hierarchy,
+    LinkCost,
+    Ring,
     Torus2D,
+    Torus3D,
+    TwoLevel,
     autotune,
     fit_level_costs,
+    fuse_rounds,
+    ir_time,
     lower,
     max_round_hops,
     plan_hierarchical,
@@ -57,6 +64,7 @@ from repro.topo import (
     plan_two_level_dft,
     remap_digits,
     round_features,
+    split_contended,
     multilevel_dft_matrix,
     two_level_dft_matrix,
 )
@@ -273,19 +281,22 @@ def test_remap_digits_hop_count_1_and_exact(rows, cols):
 
 
 def test_autotune_flips_to_remapped_butterfly_on_torus():
-    """Acceptance: on the 2D torus the remapped schedule prices cheaper
-    (contention 1, single-hop) and the tuner picks it; on flat topologies
-    the candidate is not even offered."""
+    """Acceptance: on the 2D torus the remap-digits pipeline's rewrite
+    prices cheaper (contention 1, single-hop) and the tuner picks the
+    (butterfly, remap-digits) candidate; on flat topologies no remap
+    candidate is even offered (the pipeline's predicate rejects)."""
     r = autotune(16, 1, 65536, Torus2D(4, 4), q=NTT, generator="dft")
-    assert r.algorithm == "butterfly-remap"
+    assert r.algorithm == "butterfly+remap-digits"
     chosen = r.chosen
+    assert chosen.base_algorithm == "butterfly"
+    assert chosen.pipeline == "remap-digits"
     assert chosen.estimate.max_contention == 1
     plain = next(c for c in r.candidates if c.algorithm == "butterfly")
     assert chosen.predicted_time < plain.predicted_time
     from repro.topo import FullyConnected
 
     flat = autotune(16, 1, 65536, FullyConnected(16), q=NTT, generator="dft")
-    assert all(c.algorithm != "butterfly-remap" for c in flat.candidates)
+    assert all(c.pipeline != "remap-digits" for c in flat.candidates)
 
 
 def test_autotuner_offers_multilevel_dft_on_hierarchy():
@@ -301,6 +312,183 @@ def test_autotuner_offers_multilevel_dft_on_hierarchy():
     # structured beats the universal multilevel on the same topology
     uni = next(c for c in r.candidates if c.algorithm == "multilevel")
     assert cand.predicted_time < uni.predicted_time
+
+
+# ---------------------------------------------------------------------------
+# pass pipelines: exactness + ppermute budget, over every family × fabric
+# ---------------------------------------------------------------------------
+
+#: a contended ring whose LinkCost γ > 0 — the only regime in which
+#: split_contended can strictly win (γ = 0 makes the per-link max subadditive)
+_GAMMA_RING = lambda K: Ring(K, cost=LinkCost(1e-6, 4.0 / 50e9, gamma=0.5))
+
+
+def _pipeline_topos(K):
+    """Per-K fabrics to exercise every pass predicate: contended ring
+    (split/fuse), tori (remap), two-level + hierarchy (align)."""
+    topos = [_GAMMA_RING(K)]
+    if K == 8:
+        topos += [Torus2D(2, 4), Torus3D(depth=2, rows=2, cols=2),
+                  TwoLevel(k_intra=4, k_inter=2), Hierarchy(levels=(2, 2, 2))]
+    elif K == 12:
+        topos += [TwoLevel(k_intra=4, k_inter=3), Hierarchy(levels=(4, 3))]
+    elif K == 16:
+        topos += [Torus2D(4, 4), Torus3D(depth=2, rows=2, cols=4),
+                  TwoLevel(k_intra=4, k_inter=4), Hierarchy(levels=(4, 2, 2))]
+    return topos
+
+
+@pytest.mark.parametrize("idx", range(len(_CASES)), ids=[l for l, _ in _CASES])
+def test_every_pipeline_stays_exact_and_within_ppermute_budget(idx):
+    """Property (ISSUE acceptance): every registered PassPipeline, applied to
+    every family's compiled IR at K ∈ {8, 12, 16} on every fabric where its
+    predicate passes, stays bit-exact vs. the matrix oracle and never exceeds
+    the original IR's ppermute budget."""
+    label, build = _CASES[idx]
+    ir, target, q, _, _ = build()
+    f = Field(q)
+    x = random_vector(f, ir.K, seed=idx)
+    want = encode_oracle(x, target, q)
+    budget = ir_permute_count(ir)
+    applied = 0
+    for topo in _pipeline_topos(ir.K):
+        for pl in PIPELINES.values():
+            if not pl.applicable(ir, topo):
+                continue
+            rewritten = pl.apply(ir, topo)
+            applied += 1
+            ctx = f"{label} × {pl.name} × {topo.name}"
+            np.testing.assert_array_equal(
+                interpret(rewritten, x, f)[0], want, err_msg=ctx
+            )
+            assert ir_permute_count(rewritten) <= budget, ctx
+            if rewritten is not ir and pl.name != "remap-digits":
+                # price-guarded passes never regress the α-β price
+                # (remap minimizes HOPS; the autotuner prices it separately)
+                assert ir_time(rewritten, topo) <= ir_time(ir, topo) * (
+                    1 + 1e-9
+                ), ctx
+    assert applied > 0, f"no pipeline applicable anywhere for {label}"
+
+
+def test_split_contended_strictly_improves_on_contended_ring():
+    """ISSUE acceptance: on a ring whose links degrade under contention
+    (γ > 0) the staggered schedule strictly beats the original α-β price,
+    preserving the ppermute count and bit-exactness."""
+    K, p = 16, 2
+    topo = _GAMMA_RING(K)
+    plan = plan_prepare_shoot(K, p)
+    A = random_matrix(F, K, seed=3)
+    ir = plan.to_ir(A)
+    pay = (1 << 20) // 4
+    split = split_contended(ir, topo, pay)
+    assert split is not ir
+    assert ir_time(split, topo, pay) < ir_time(ir, topo, pay)
+    assert split.c1 > ir.c1  # staggering costs rounds, wins time
+    assert ir_permute_count(split) == ir_permute_count(ir)
+    x = random_vector(F, K, seed=4)
+    np.testing.assert_array_equal(
+        interpret(split, x, F)[0], encode_oracle(x, A, M31)
+    )
+    # γ = 0 additive model: the identical call is a provable no-op
+    assert split_contended(ir, Ring(K), pay) is ir
+
+
+def test_fuse_rounds_merges_legal_neighbors_and_repacks_split():
+    """fuse_rounds merges adjacent hazard-free rounds within the p-port
+    budget (synthetic IR: 2 rounds → 1, bit-identical), and re-packs
+    split_contended's staggering back to the original round count when the
+    pricing topology doesn't charge for contention."""
+    from repro.core.ir import CommRound, ScheduleIR, Transfer
+
+    K, p = 4, 2
+    a = CommRound(tuple(
+        Transfer(k, (k + 1) % K, port=1, slots=((0, 1),), mode="store")
+        for k in range(K)
+    ))
+    b = CommRound(tuple(
+        Transfer(k, (k + 2) % K, port=1, slots=((0, 2),), mode="store")
+        for k in range(K)
+    ))
+    ir = ScheduleIR("synthetic", K, p, (a, b))
+    fused = fuse_rounds(ir, Ring(K))
+    assert fused.c1 == 1 and ir.c1 == 2
+    assert ir_permute_count(fused) == ir_permute_count(ir)  # 2 port groups
+    x = random_vector(F, K, seed=7)
+    np.testing.assert_array_equal(interpret(fused, x, F)[0], interpret(ir, x, F)[0])
+    # p=1 would blow the port budget: the merge must be refused
+    assert fuse_rounds(ScheduleIR("synthetic", K, 1, (a, b)), Ring(K)).c1 == 2
+
+    topo = _GAMMA_RING(16)
+    base = plan_prepare_shoot(16, 2).to_ir(random_matrix(F, 16, seed=5))
+    split = split_contended(base, topo, 1 << 18)
+    assert split.c1 > base.c1
+    repacked = fuse_rounds(split, Ring(16), 1 << 18)  # γ = 0: merging is free
+    assert repacked.c1 == base.c1
+
+
+def test_remap_digits_torus3d_hop_count_1_and_exact():
+    """Torus3D: the 3D Gray embedding makes every butterfly partner a torus
+    neighbor for all-2/4 dims, bit-exactly, with unchanged budgets."""
+    f = Field(NTT)
+    for depth, rows, cols in [(2, 2, 2), (2, 2, 4)]:
+        K = depth * rows * cols
+        topo = Torus3D(depth=depth, rows=rows, cols=cols)
+        plan = plan_butterfly(K, 1, NTT)
+        ir = plan.to_ir()
+        if (depth, rows, cols) != (2, 2, 2):
+            # (all-size-2 dims are already neighbor-complete; 2×2×4 is not)
+            assert max_round_hops(ir, topo) > 1
+        rir = remap_digits(ir, topo)
+        assert max_round_hops(rir, topo) == 1, (depth, rows, cols)
+        x = random_vector(f, K, seed=K)
+        np.testing.assert_array_equal(
+            interpret(rir, x, f)[0],
+            encode_oracle(x, butterfly_target_matrix(f, K, 2), NTT),
+        )
+        assert ir_permute_count(rir) == ir_permute_count(ir)
+
+
+def test_remap_digits_radix_reexpression_on_binary_torus():
+    """A radix-4 butterfly (p = 3) has no radix-4 digits on a 2×8 torus; the
+    pass re-expresses its digits in binary (radix 4 is a 2-power) and still
+    finds a low-dilation embedding — exact, budget preserved."""
+    from repro.topo.passes import _remap_radix
+
+    f = Field(NTT)
+    K, p = 16, 3
+    topo = Torus2D(2, 8)
+    plan = plan_butterfly(K, p, NTT)
+    ir = plan.to_ir()
+    assert _remap_radix(ir, topo) == (2, 4)
+    rir = remap_digits(ir, topo)
+    assert rir is not ir
+    assert max_round_hops(rir, topo) < max_round_hops(ir, topo)
+    x = random_vector(f, K, seed=11)
+    np.testing.assert_array_equal(
+        interpret(rir, x, f)[0],
+        encode_oracle(x, butterfly_target_matrix(f, K, p + 1), NTT),
+    )
+    assert ir_permute_count(rir) == ir_permute_count(ir)
+
+
+def test_remap_digits_greedy_fallback_warns_and_stays_exact():
+    """Satellite: forcing the assignment search over its exhaustive limit
+    takes the greedy-swap fallback, which WARNS (never silently truncates —
+    the historical H > 12 behavior) and still returns an exact relabeling."""
+    f = Field(NTT)
+    K = 16
+    topo = Torus2D(4, 4)
+    plan = plan_butterfly(K, 1, NTT)
+    ir = plan.to_ir()
+    with pytest.warns(RuntimeWarning, match="greedy swap"):
+        rir = remap_digits(ir, topo, exhaustive_limit=1)
+    assert max_round_hops(rir, topo) == 1  # greedy finds the Gray embedding
+    x = random_vector(f, K, seed=13)
+    np.testing.assert_array_equal(
+        interpret(rir, x, f)[0],
+        encode_oracle(x, butterfly_target_matrix(f, K, 2), NTT),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -412,6 +600,58 @@ def test_remapped_butterfly_on_torus_mesh():
     )
     assert r.returncode == 0, f"child failed:\nSTDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
     assert "torus remap exec ok" in r.stdout
+
+
+def test_remapped_butterfly_on_torus3d_mesh():
+    """8 forced host devices as a 2×2×2 (z × y × x) 3D torus mesh: the
+    3D-embedded butterfly IR runs through the generic ir_encode_jit,
+    bit-exact under the placement permutation, collective-permutes only
+    (the CI 3D-torus-mesh step)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    code = """
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.launch.mesh import make_mesh
+        from repro.core.field import NTT, Field
+        from repro.core.matrices import butterfly_target_matrix, random_vector
+        from repro.core.prepare_shoot import encode_oracle
+        from repro.core.schedule import plan_butterfly
+        from repro.topo import Torus3D, max_round_hops, remap_digits
+        from repro.dist.collectives import ir_encode_jit
+
+        f = Field(NTT)
+        K = 8
+        topo = Torus3D(depth=2, rows=2, cols=2)
+        plan = plan_butterfly(K, 1, NTT)
+        rir = remap_digits(plan.to_ir(), topo)
+        assert max_round_hops(rir, topo) == 1
+        mesh = make_mesh((2, 2, 2), ("z", "y", "x"))
+        fn = ir_encode_jit(mesh, ("z", "y", "x"), rir, q=NTT)
+        x = random_vector(f, (K, 16), seed=6)
+        place = np.asarray(rir.placement if rir.placement is not None
+                           else np.arange(K))
+        inv = np.empty(K, np.int64); inv[place] = np.arange(K)
+        out_dev = np.asarray(
+            fn(jnp.asarray(x[inv].astype(np.uint32))), dtype=np.uint64)
+        out = out_dev[place]
+        G = butterfly_target_matrix(f, K, 2)
+        np.testing.assert_array_equal(out, encode_oracle(x, G, NTT))
+        jaxpr = jax.make_jaxpr(fn)(jax.ShapeDtypeStruct((K, 4), jnp.uint32))
+        assert str(jaxpr).count("ppermute") == plan.H * 1
+        txt = fn.lower(jax.ShapeDtypeStruct((K, 16), jnp.uint32)).compile().as_text()
+        assert txt.count("collective-permute") > 0 and "all-gather" not in txt
+        print("torus3d remap exec ok")
+    """
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    assert r.returncode == 0, f"child failed:\nSTDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "torus3d remap exec ok" in r.stdout
 
 
 def test_ir_permute_counts_match_committed_budgets():

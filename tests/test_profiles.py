@@ -59,13 +59,13 @@ def test_resolve_profile_picks_hierarchical_from_mesh_topology():
     from repro.launch.mesh import production_topology
     from repro.launch.profiles import resolve_profile
 
-    prof = resolve_profile(multi_pod=True)
+    prof = resolve_profile(multi_pod=True, calibration=False)
     assert prof.algorithm == "multilevel"
     assert prof.levels == (4, 4, 2) == prof.plan.levels
     assert prof.topology.levels == production_topology(multi_pod=True).levels
     assert prof.tune.chosen.plan is prof.plan
 
-    single = resolve_profile(multi_pod=False)
+    single = resolve_profile(multi_pod=False, calibration=False)
     assert single.algorithm == "hierarchical"
     assert single.levels == (4, 4)
 
@@ -83,7 +83,8 @@ def test_resolve_profile_from_live_mesh_shape():
     axes = ("pod", "slice", "chip")
     assert mesh_encode_levels(mesh, axes) == (2, 2, 2)
     assert topology_for_mesh(mesh, axes).levels == (2, 2, 2)
-    prof = resolve_profile(mesh=mesh, axes=axes, payload_bytes=65536)
+    prof = resolve_profile(mesh=mesh, axes=axes, payload_bytes=65536,
+                           calibration=False)
     assert prof.algorithm == "multilevel" and prof.plan.levels == (2, 2, 2)
     with pytest.raises(ValueError):
         resolve_profile(mesh=mesh)  # axes required with mesh
@@ -95,14 +96,86 @@ def test_resolve_profile_measured_override():
     measured_s feedback path)."""
     from repro.launch.profiles import resolve_profile
 
-    base = resolve_profile(multi_pod=True)
+    base = resolve_profile(multi_pod=True, calibration=False)
     slow = {
         c.algorithm: 1.0
         for c in base.tune.candidates
         if c.algorithm != "prepare-shoot"
     }
-    forced = resolve_profile(multi_pod=True, measured={**slow, "prepare-shoot": 1e-9})
+    forced = resolve_profile(multi_pod=True, calibration=False,
+                             measured={**slow, "prepare-shoot": 1e-9})
     assert forced.algorithm == "prepare-shoot"
+
+
+def test_generator_kind_taxonomy():
+    """Satellite: the checkpoint layer's matrix kind maps into the autotuner
+    taxonomy; unknown kinds are a loud error."""
+    from repro.launch.profiles import generator_kind_for
+
+    assert generator_kind_for("cauchy") == "general"
+    assert generator_kind_for("random") == "general"
+    assert generator_kind_for("vandermonde") == "vandermonde"
+    assert generator_kind_for("dft") == "dft"
+    with pytest.raises(ValueError, match="unknown generator matrix kind"):
+        generator_kind_for("hilbert")
+
+
+def test_resolve_profile_threads_generator_kind():
+    """Satellite: resolve_profile defaults the generator taxonomy from the
+    checkpoint layer's Cauchy matrix (→ "general": no structured families),
+    and an explicit generator= unlocks them."""
+    from repro.core.field import NTT
+    from repro.launch.profiles import resolve_profile
+
+    default = resolve_profile(multi_pod=False, calibration=False)
+    names = {c.base_algorithm for c in default.tune.candidates}
+    assert "multilevel-dft" not in names and "draw-loose" not in names
+
+    dft = resolve_profile(
+        multi_pod=False, q=NTT, generator="dft", calibration=False
+    )
+    dft_names = {c.base_algorithm for c in dft.tune.candidates}
+    assert "hierarchical-dft" in dft_names or "multilevel-dft" in dft_names
+
+
+def test_resolve_profile_prices_with_fitted_calibration(tmp_path):
+    """Acceptance: when persisted calibration rows exist, resolve_profile
+    loads them (topo.calibrate.load_fitted_costs), replaces the hierarchy's
+    level costs, exposes them on EncodeProfile.fitted_costs, and the
+    candidate table's prices visibly reflect the fitted α/β."""
+    import json
+
+    from repro.launch.profiles import resolve_profile
+    from repro.topo import LinkCost, load_fitted_costs
+
+    # absurdly slow fitted constants so the repricing is unmistakable
+    rows = [
+        {"level": 0, "alpha_s": 0.5, "beta_s_per_elem": 1e-6},
+        {"level": 1, "alpha_s": 2.0, "beta_s_per_elem": 1e-5},
+    ]
+    path = tmp_path / "BENCH_topology.json"
+    path.write_text(json.dumps({"calibration": {"fitted_level_costs": rows}}))
+
+    fitted = load_fitted_costs(str(path))
+    assert fitted == (LinkCost(0.5, 1e-6), LinkCost(2.0, 1e-5))
+    assert load_fitted_costs(str(tmp_path / "missing.json")) is None
+
+    # multi_pod=False → Hierarchy((4, 4)): 2 levels, exact match with rows
+    prof = resolve_profile(multi_pod=False, calibration=str(path))
+    assert prof.fitted_costs == fitted
+    assert tuple(prof.topology.costs) == fitted
+    assert prof.tune.chosen.predicted_time > 1.0  # α alone is ≥ 0.5 s/round
+
+    base = resolve_profile(multi_pod=False, calibration=False)
+    assert base.fitted_costs is None
+    assert base.tune.chosen.predicted_time < 1.0
+
+    # level-count mismatch: fitted endpoints re-interpolated to 3 levels
+    deep = resolve_profile(multi_pod=True, calibration=str(path))
+    assert deep.fitted_costs is not None
+    assert len(deep.fitted_costs) == len(deep.topology.levels) == 3
+    assert deep.fitted_costs[0] == fitted[0]
+    assert deep.fitted_costs[-1] == fitted[-1]
 
 
 def test_opt_profile_smoke_compiles_1dev(mesh):

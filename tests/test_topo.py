@@ -29,6 +29,7 @@ from repro.topo import (
     LinkCost,
     Ring,
     Torus2D,
+    Torus3D,
     TwoLevel,
     autotune,
     default_level_costs,
@@ -455,5 +456,123 @@ def test_make_topology_factory():
     assert t.k_intra == 4 and t.k_inter == 2
     tor = make_topology("torus", 12, k_intra=3)
     assert (tor.rows, tor.cols) == (3, 4)
+    t3 = make_topology("torus3d", 16, levels=(4, 2, 2))
+    assert isinstance(t3, Torus3D)
+    assert (t3.cols, t3.rows, t3.depth) == (4, 2, 2) and t3.n == 16
+    with pytest.raises(ValueError):
+        make_topology("torus3d", 16, levels=(4, 4))  # needs 3 dims
     with pytest.raises(ValueError):
         make_topology("moebius", 8)
+
+
+# ---------------------------------------------------------------------------
+# 3D torus + the pass-pipeline optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_torus3d_routing_dimension_ordered():
+    t = Torus3D(depth=2, rows=2, cols=4)
+    assert t.n == 16
+    # k = (z·rows + r)·cols + c
+    assert t.coords(13) == (1, 1, 1)
+    # (0,0,0) → (1,1,2): 2 x-hops (col ring of size 4), 1 y, 1 z
+    dst = (1 * 2 + 1) * 4 + 2
+    assert t.hops(0, dst) == 4
+    assert [l[0] for l in t.route(0, dst)] == ["x", "x", "y", "z"]
+    # wraparound in every dimension: (0,0,0) → (1,1,3) is 1 hop per dim
+    assert t.hops(0, (1 * 2 + 1) * 4 + 3) == 3
+    assert t.hops(5, 5) == 0 and t.route(5, 5) == ()
+    # two messages riding the same physical ring segment share a link key
+    assert t.route(0, 1)[0] == t.route(0, 2)[0]  # both start on x@(z=0,r=0) 0→1
+    # different planes use different links
+    assert t.route(0, 1)[0] != t.route(8, 9)[0]
+
+
+# (fabric, K, p, payload bytes, topology, q, generator, expected winning
+# "<base>+<pipeline>" candidate, whether it must be the GLOBAL winner)
+_FABRIC_WINS = [
+    (
+        "ring",
+        16,
+        2,
+        1 << 20,
+        Ring(16, cost=LinkCost(1e-6, 4.0 / 50e9, gamma=0.5)),
+        M31,
+        "general",
+        "prepare-shoot+split-contended",
+        False,  # the neighbor-only ring schedule still wins globally
+    ),
+    ("torus2d", 16, 1, 65536, Torus2D(4, 4), NTT, "dft",
+     "butterfly+remap-digits", True),
+    ("torus3d", 16, 1, 65536, Torus3D(depth=2, rows=2, cols=4), NTT, "dft",
+     "butterfly+remap-digits", True),
+    ("hierarchy", 12, 1, 65536, Hierarchy(levels=(4, 3)), NTT, "vandermonde",
+     "draw-loose+align-subgroups", True),
+]
+
+
+@pytest.mark.parametrize(
+    "fabric,K,p,payload,topo,q,generator,winner,is_global",
+    _FABRIC_WINS,
+    ids=[row[0] for row in _FABRIC_WINS],
+)
+def test_pipeline_beats_unrewritten_ir_on_every_fabric(
+    fabric, K, p, payload, topo, q, generator, winner, is_global
+):
+    """Acceptance: on at least one scenario per fabric (ring, 2D torus, 3D
+    torus, hierarchy) a non-empty pass pipeline strictly beats the
+    un-rewritten IR of the same algorithm by the α-β price."""
+    r = autotune(K, p, payload, topo, q=q, generator=generator)
+    cand = next(c for c in r.candidates if c.algorithm == winner)
+    base = next(c for c in r.candidates if c.algorithm == cand.base_algorithm)
+    assert cand.pipeline and cand.algorithm == f"{cand.base_algorithm}+{cand.pipeline}"
+    assert cand.predicted_time < base.predicted_time, fabric
+    if is_global:
+        assert r.algorithm == winner
+        assert r.chosen.pipeline == cand.pipeline
+
+
+def test_autotune_candidates_carry_pipeline_fields():
+    """Every candidate names its (base_algorithm, pipeline) pair; pipelined
+    rewrites are extra candidates, never replacements for the base compile."""
+    r = autotune(16, 1, 65536, Torus2D(4, 4), q=NTT, generator="dft")
+    names = [c.algorithm for c in r.candidates]
+    assert "butterfly" in names and "butterfly+remap-digits" in names
+    for c in r.candidates:
+        if c.pipeline:
+            assert c.algorithm == f"{c.base_algorithm}+{c.pipeline}"
+        else:
+            assert c.algorithm == c.base_algorithm
+    # pipelines=False restores the un-rewritten candidate set exactly
+    off = autotune(16, 1, 65536, Torus2D(4, 4), q=NTT, generator="dft",
+                   pipelines=False)
+    assert [c.algorithm for c in off.candidates] == [
+        c.algorithm for c in r.candidates if not c.pipeline
+    ]
+
+
+def test_preference_rank_tolerates_unknown_algorithm_names():
+    """Regression: the tie-break historically did _PREFERENCE.index(name) and
+    raised ValueError for any name outside the hardcoded tuple (e.g. a
+    pipelined candidate's suffixed name reaching it, or a plugin family).
+    Unknown names now sort last instead of blowing up the whole autotune."""
+    from dataclasses import replace
+
+    from repro.topo.autotune import _PREFERENCE, _preference_rank
+
+    assert _preference_rank("butterfly") == 0
+    assert _preference_rank("no-such-family") == len(_PREFERENCE)
+    assert _preference_rank("butterfly+remap-digits") == len(_PREFERENCE)
+    # a full tune whose candidates include an unknown base name still ranks
+    base = autotune(8, 1, 4096, FullyConnected(8), generator="general")
+    renamed = [
+        replace(c, algorithm="plugin-" + c.algorithm,
+                base_algorithm="plugin-" + c.base_algorithm)
+        for c in base.candidates
+    ]
+    ranked = sorted(
+        renamed,
+        key=lambda c: (c.time, c.pipeline != "",
+                       _preference_rank(c.base_algorithm or c.algorithm)),
+    )
+    assert len(ranked) == len(base.candidates)

@@ -26,7 +26,7 @@ def run():
     rng = np.random.default_rng(0)
     shards = jnp.asarray(rng.integers(0, 1 << 16, size=(K, S), dtype=np.uint32))
     fn = jax.jit(lambda x: encode_parity(x, plan))
-    us = time_fn(fn, shards, iters=3)
+    us = time_fn(fn, shards, iters=3, metric="bench.coded_ckpt_us")
     mb = K * S * 2 / 1e6  # 16-bit payload per limb
     emit("coded_ckpt_encode_K16_64Klimbs", us, f"MB={mb:.1f},MBps={mb / (us / 1e6):.0f}")
 

@@ -31,7 +31,7 @@ def run():
     plan = plan_butterfly(K, 1, NTT)
     x = jnp.asarray(random_vector(f, (K, payload), seed=1).astype(np.uint32))
     fn = jax.jit(lambda xx: encode_dft(xx, plan))
-    us = time_fn(fn, x)
+    us = time_fn(fn, x, metric="bench.dft_us")
     emit("butterfly_K256_payload1024", us, f"C2={plan.H}_vs_universal={bounds.theorem1_c2(K, 1)}")
 
 

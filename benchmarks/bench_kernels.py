@@ -27,12 +27,12 @@ def run():
     M, K, N = 128, 512, 128
     a = jnp.asarray(rng.integers(0, q, size=(M, K), dtype=np.uint32))
     b = jnp.asarray(rng.integers(0, q, size=(K, N), dtype=np.uint32))
-    us_pallas = time_fn(lambda: gf_matmul(a, b, q=q), iters=3)
+    us_pallas = time_fn(lambda: gf_matmul(a, b, q=q), iters=3, metric="bench.gf_matmul_us")
     # analytic: 16 uint8 dot passes of M*N*K MACs on the 197 TFLOP/s int8 MXU
     macs = M * N * K
     tpu_us = 16 * 2 * macs / 197e12 * 1e6
     emit("gf_matmul_128x512x128_pallas_interp", us_pallas, f"analytic_tpu_us={tpu_us:.2f}")
-    us_ref = time_fn(lambda: gf_matmul_ref(a, b, q), iters=3)
+    us_ref = time_fn(lambda: gf_matmul_ref(a, b, q), iters=3, metric="bench.gf_matmul_ref_us")
     emit("gf_matmul_128x512x128_jnp_ref", us_ref, "oracle")
     import time as _t
 
@@ -45,8 +45,16 @@ def run():
     parts = jnp.asarray(rng.integers(0, NTT, size=(radix, B, P), dtype=np.uint32))
     tw = jnp.asarray(rng.integers(0, NTT, size=(B, radix), dtype=np.uint32))
     tw_sh = jnp.asarray(np.asarray(shoup_precompute(np.asarray(tw), NTT)))
-    us_fused = time_fn(lambda: butterfly_mac(parts, tw, tw_sh, q=NTT), iters=3)
-    us_unfused = time_fn(lambda: butterfly_mac_reference(parts, tw, tw_sh, q=NTT), iters=3)
+    us_fused = time_fn(
+        lambda: butterfly_mac(parts, tw, tw_sh, q=NTT),
+        iters=3,
+        metric="bench.butterfly_mac_us",
+    )
+    us_unfused = time_fn(
+        lambda: butterfly_mac_reference(parts, tw, tw_sh, q=NTT),
+        iters=3,
+        metric="bench.butterfly_mac_ref_us",
+    )
     # analytic HBM traffic: fused reads radix·B·P + writes B·P once (vs
     # unfused writing radix intermediate rounds): bytes ratio (radix+1)/(2radix)
     emit(

@@ -33,7 +33,11 @@ def run():
     c2 = 2 * bounds.theorem3_c1_c2(K, 1, pw.M, pw.H)[1]
     print(f"# Theorem4 K={K}: C1={c1} C2={c2} (2x draw-and-loose), exact=True")
     fn = jax.jit(lambda xx: encode_lagrange(xx, pw, pa))
-    us = time_fn(fn, jnp.asarray(random_vector(f, (K, 512), seed=5).astype(np.uint32)))
+    us = time_fn(
+        fn,
+        jnp.asarray(random_vector(f, (K, 512), seed=5).astype(np.uint32)),
+        metric="bench.lagrange_us",
+    )
     emit("lagrange_K16_payload512", us, f"C1={c1}_C2={c2}")
 
     # LCC application (the paper's §VI motivation)

@@ -6,26 +6,32 @@ inter×intra mesh), ``multilevel_encode_jit`` (2×2×2 pod×slice×chip mesh —
 the recursive three-level schedule) and the ``allgather_encode_jit`` foil on
 the same Vandermonde encode ACROSS A PAYLOAD SWEEP, in a subprocess with
 ``--xla_force_host_platform_device_count=8`` (the override must not leak
-into sibling benchmarks). Emits ``results/BENCH_topology.json`` with:
+into sibling benchmarks). All timing goes through ``benchmarks.common.
+time_fn`` (samples routed into ``bench.topology.*_us`` metrics
+histograms), and the child ALSO runs the three-level encode through
+``ir_encode_jit(tracer=...)`` — the traced per-round dispatch path — so
+every CommRound leaves a span with measured wall µs next to the α-β
+model's prediction. Emits ``results/BENCH_topology.json`` with:
 
 * the measured wall times next to the autotuner's α-β predictions on the
   matching two-level topology (``measured_s`` feeds straight back into
   ``autotune(..., measured=...)`` / ``resolve_profile(measured=...)``);
 * a ``three_level`` block with the same sweep priced on the
   ``Hierarchy(levels=(2, 2, 2))`` model;
-* a ``calibration`` block — one sample per (algorithm, payload) with the
-  measured seconds and the per-round ``{level, msgs, elems}`` rows
-  (``topo.round_features`` on the three-level model) that
-  ``topo.fit_level_costs`` least-squares into per-level α/β (the ROADMAP
-  calibration item), plus the fitted costs themselves.
+* a ``calibration`` block — offline aggregate ``samples`` (one per
+  (algorithm, payload): whole-encode seconds + analytic per-round
+  ``{level, msgs, elems}`` rows) AND a ``live`` sub-block fitted from the
+  traced per-round spans (the ROADMAP "feed the fit from LIVE sweep
+  telemetry" item — ``repro.obs.feed``). The persisted
+  ``fitted_level_costs`` come from the live fit when it succeeds, and are
+  verified to round-trip through ``topo.calibrate.load_fitted_costs`` —
+  the exact loader ``launch.profiles.resolve_profile`` uses;
+* the child's metrics-registry snapshot under ``metrics``.
 
-The ``predicted`` tables include every (algorithm, pipeline) candidate the
-autotuner enumerated (rows like ``draw-loose+align-subgroups`` carry their
-``pipeline`` name), and the persisted ``calibration.fitted_level_costs``
-block is verified to round-trip through ``topo.calibrate.load_fitted_costs``
-— the exact loader ``launch.profiles.resolve_profile`` uses to price with
-measured constants. ``launch/perf_report.py`` renders the
-predicted-vs-measured tables.
+The traced spans are also persisted under ``results/traces/
+bench_topology.{jsonl,trace.json}`` (Perfetto-loadable);
+``launch/perf_report.py`` renders the predicted-vs-measured tables and
+``render_drift`` renders the per-round drift from the trace.
 """
 
 from __future__ import annotations
@@ -43,29 +49,22 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 PAYLOADS = (1 << 12, 1 << 14, 1 << 16)
 
 _CHILD = """
-    import json, time
+    import json
     import numpy as np, jax, jax.numpy as jnp
+    from benchmarks.common import time_fn
     from repro.launch.mesh import make_mesh
     from repro.core.field import M31, Field
     from repro.core.matrices import distinct_points, vandermonde, random_vector
     from repro.dist.collectives import (
-        allgather_encode_jit, hierarchical_encode_jit, multilevel_encode_jit,
-        ps_encode_jit)
+        allgather_encode_jit, hierarchical_encode_jit, ir_encode_jit,
+        multilevel_encode_jit, ps_encode_jit)
+    from repro.obs import Tracer, get_registry
+    from repro.topo import Hierarchy, plan_multilevel
 
     K = 8
     PAYLOADS = %(payloads)r
     f = Field(M31)
     A = np.asarray(vandermonde(f, distinct_points(f, K, seed=0)))
-
-    def timeit(fn, x, iters=5):
-        jax.block_until_ready(fn(x))
-        ts = []
-        for _ in range(iters):
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn(x))
-            ts.append((time.perf_counter() - t0) * 1e6)
-        ts.sort()
-        return ts[len(ts) // 2]
 
     mesh1 = make_mesh((8,), ("enc",))
     mesh2 = make_mesh((4, 2), ("inter", "intra"))
@@ -76,7 +75,15 @@ _CHILD = """
     fn_ag = allgather_encode_jit(mesh1, "enc", A)
     fns = {"prepare-shoot": fn_ps, "hierarchical": fn_h,
            "multilevel": fn_m, "allgather": fn_ag}
+    # the traced per-round dispatch of the SAME three-level schedule:
+    # every CommRound becomes one span with measured wall vs predicted us
+    topo3 = Hierarchy(levels=(2, 2, 2))
+    ir3 = plan_multilevel(K, 1, (2, 2, 2)).to_ir(A)
+    tracer = Tracer()
+    fn_traced = ir_encode_jit(
+        mesh3, ("pod", "slice", "chip"), ir3, tracer=tracer, topo=topo3)
     sweep = {alg: {} for alg in fns}
+    live_windows = []
     for pay in PAYLOADS:
         x = jnp.asarray(random_vector(f, (K, pay), seed=1).astype(np.uint32))
         outs = {alg: np.asarray(fn(x)) for alg, fn in fns.items()}
@@ -84,15 +91,31 @@ _CHILD = """
         for alg, o in outs.items():
             assert np.array_equal(ref, o), f"flat and {alg} disagree"
         for alg, fn in fns.items():
-            sweep[alg][str(pay)] = timeit(fn, x)
-    print(json.dumps(sweep))
+            sweep[alg][str(pay)] = time_fn(
+                fn, x, warmup=1, iters=5,
+                metric=f"bench.topology.{alg}_us")
+        # traced run: first call compiles the per-round dispatches; only
+        # the second call's spans are calibration-grade measurements
+        assert np.array_equal(ref, np.asarray(fn_traced(x)))
+        n0 = len(tracer.spans)
+        assert np.array_equal(ref, np.asarray(fn_traced(x)))
+        live_windows.append((n0, len(tracer.spans)))
+    measured_spans = []
+    for n0, n1 in live_windows:
+        measured_spans += [s.to_dict() for s in tracer.spans[n0:n1]]
+    print(json.dumps({
+        "sweep": sweep,
+        "spans": measured_spans,
+        "metrics": get_registry().snapshot(),
+    }))
 """
 
 
 def run():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    # repo root (for benchmarks.common) + src (for repro)
+    env["PYTHONPATH"] = os.pathsep.join([REPO, os.path.join(REPO, "src")])
     r = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(_CHILD % {"payloads": PAYLOADS})],
         capture_output=True,
@@ -102,10 +125,13 @@ def run():
     )
     if r.returncode != 0:
         raise RuntimeError(f"bench_topology child failed:\n{r.stdout}\n{r.stderr}")
-    sweep = json.loads(r.stdout.strip().splitlines()[-1])
+    child = json.loads(r.stdout.strip().splitlines()[-1])
+    sweep = child["sweep"]
+    spans = child["spans"]
 
     # α-β predictions for the same scenario on the matching topologies
     from repro.core.schedule import plan_prepare_shoot
+    from repro.obs import drift_rows, round_measurements, write_chrome_trace, write_spans_jsonl
     from repro.topo import (
         Hierarchy,
         TwoLevel,
@@ -148,6 +174,7 @@ def run():
         # seconds, the unit autotune(..., measured=...) compares against
         "measured_s": {alg: us * 1e-6 for alg, us in two_level_us.items()},
         "predicted": predicted,
+        "metrics": child["metrics"],
     }
     # three-level sweep: the same encode priced on the recursive hierarchy
     topo3 = Hierarchy(levels=(2, 2, 2))
@@ -164,8 +191,8 @@ def run():
         "measured_s": {alg: us * 1e-6 for alg, us in three_level_us.items()},
         "predicted": predicted_rows(result3),
     }
-    # calibration block: per-(algorithm, payload) wall seconds + the
-    # per-round {level, msgs, elems} rows fit_level_costs consumes
+    # calibration block: offline aggregate samples (whole-encode seconds ×
+    # analytic round features) + the live per-round span fit
     rounds_by_alg = {
         "prepare-shoot": lower(plan_prepare_shoot(K, 1)).rounds,
         "hierarchical": lower(plan_hierarchical(K, 1, 2)).rounds,
@@ -184,7 +211,16 @@ def run():
                     "rounds": feats,
                 }
             )
-    fitted = fit_level_costs(samples, n_levels=3)
+    offline_fit = fit_level_costs(samples, n_levels=3)
+    live_samples = round_measurements(spans)
+    try:
+        live_fit = fit_level_costs(live_samples, n_levels=3)
+    except ValueError:
+        live_fit = None
+    # the persisted (load_fitted_costs-visible) costs are the LIVE fit when
+    # the traced sweep produced one — telemetry-fed calibration; the offline
+    # aggregate fit stays alongside for comparison
+    fitted = live_fit if live_fit is not None else offline_fit
     record["calibration"] = {
         "model": "hierarchy levels=(2, 2, 2)",
         "samples": samples,
@@ -192,13 +228,39 @@ def run():
             {"level": j, "alpha_s": c.alpha, "beta_s_per_elem": c.beta}
             for j, c in enumerate(fitted)
         ],
+        "source": "live-trace" if live_fit is not None else "offline-aggregate",
+        "offline_fitted_level_costs": [
+            {"level": j, "alpha_s": c.alpha, "beta_s_per_elem": c.beta}
+            for j, c in enumerate(offline_fit)
+        ],
+        "live": {
+            "samples": live_samples,
+            "fitted_level_costs": None
+            if live_fit is None
+            else [
+                {"level": j, "alpha_s": c.alpha, "beta_s_per_elem": c.beta}
+                for j, c in enumerate(live_fit)
+            ],
+            "note": "per-round spans from ir_encode_jit(tracer=...) on the "
+            "2x2x2 forced-host mesh (repro.obs.feed)",
+        },
         "note": "forced-host CPU emulation — the fit demonstrates the "
         "measured→α/β path; run on real ICI/DCI hardware for usable costs",
     }
+    # per-round predicted-vs-measured drift from the traced sweep
+    record["drift"] = drift_rows(spans)
     os.makedirs(os.path.join(REPO, "results"), exist_ok=True)
     out_path = os.path.join(REPO, "results", "BENCH_topology.json")
     with open(out_path, "w") as fh:
         json.dump(record, fh, indent=2)
+    # persist the trace itself (Perfetto-loadable + machine-readable)
+    traces = os.path.join(REPO, "results", "traces")
+    write_spans_jsonl(spans, os.path.join(traces, "bench_topology.jsonl"))
+    write_chrome_trace(
+        spans,
+        os.path.join(traces, "bench_topology.trace.json"),
+        process_name="bench_topology",
+    )
     # the persisted block must round-trip through the loader resolve_profile
     # uses — the calibration loop is only closed if this re-reads exactly
     from repro.topo import load_fitted_costs

@@ -43,7 +43,7 @@ def run():
     A = jnp.asarray(random_matrix(f, K, seed=0).astype(np.uint32))
     x = jnp.asarray(random_vector(f, (K, payload), seed=1).astype(np.uint32))
     fn = jax.jit(lambda xx, aa: encode_universal(xx, aa, p=1, q=M31))
-    us = time_fn(fn, x, A)
+    us = time_fn(fn, x, A, metric="bench.universal_us")
     emit("universal_ps_K64_payload1024", us, f"C2={bounds.theorem1_c2(K, 1)}")
 
 

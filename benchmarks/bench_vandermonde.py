@@ -34,7 +34,7 @@ def run():
     plan = plan_draw_loose(K, 1, NTT)
     x = jnp.asarray(random_vector(f, (K, payload), seed=1).astype(np.uint32))
     fn = jax.jit(lambda xx: encode_draw_loose(xx, plan))
-    us = time_fn(fn, x)
+    us = time_fn(fn, x, metric="bench.vandermonde_us")
     emit("draw_loose_K64_payload1024", us, f"M={plan.M}_H={plan.H}_C2={plan.c2}")
 
 

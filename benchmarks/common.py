@@ -1,4 +1,13 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing + CSV emission.
+
+``time_fn`` is THE timing helper for every benchmark (bench_topology's
+subprocess child included — no local re-implementations): warmup calls,
+``iters`` timed calls with ``block_until_ready``, median µs returned.
+Passing ``metric=`` routes every individual sample through the
+``repro.obs.metrics`` histogram of that name, so a benchmark run leaves a
+queryable latency distribution (count/p50/p90/p99) behind in the registry
+snapshot instead of only the median on stdout.
+"""
 
 from __future__ import annotations
 
@@ -7,8 +16,24 @@ import time
 import jax
 
 
-def time_fn(fn, *args, warmup: int = 1, iters: int = 5) -> float:
-    """Median wall time (µs) of fn(*args) with block_until_ready."""
+def time_fn(
+    fn,
+    *args,
+    warmup: int = 1,
+    iters: int = 5,
+    metric: str | None = None,
+    registry=None,
+) -> float:
+    """Median wall time (µs) of fn(*args) with block_until_ready. With
+    ``metric``, each sample is also observed in that histogram of
+    ``registry`` (default: the process-local ``repro.obs`` one)."""
+    hist = None
+    if metric is not None:
+        if registry is None:
+            from repro.obs.metrics import get_registry
+
+            registry = get_registry()
+        hist = registry.histogram(metric)
     for _ in range(warmup):
         r = fn(*args)
         jax.block_until_ready(r)
@@ -18,6 +43,9 @@ def time_fn(fn, *args, warmup: int = 1, iters: int = 5) -> float:
         r = fn(*args)
         jax.block_until_ready(r)
         ts.append((time.perf_counter() - t0) * 1e6)
+    if hist is not None:
+        for t in ts:
+            hist.observe(t)
     ts.sort()
     return ts[len(ts) // 2]
 

@@ -3,11 +3,19 @@
 # The paper is theory-only; its "tables" are Theorems 1-4 + Figures 1-4, each
 # of which gets a benchmark module; the coded-system applications (Remark 1,
 # §VI) and the dry-run roofline get their own.
+#
+# ``--trace`` wraps every module's run() in a ``repro.obs`` span and writes
+# the whole-suite Chrome trace (results/traces/bench_suite.trace.json —
+# Perfetto-loadable) plus the metrics-registry snapshot
+# (results/bench_metrics.json: the per-sample latency histograms
+# ``benchmarks.common.time_fn`` fed) after the run.
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    trace = "--trace" in argv
     from . import (
         bench_universal,      # Theorem 1 / Lemmas 1-3 / Fig. 1-3
         bench_dft,            # Theorem 2 / Fig. 4
@@ -19,6 +27,13 @@ def main() -> None:
         bench_dryrun_roofline,# deliverable (g) table
         bench_topology,       # repro.topo: flat vs hierarchical on 8 devices
     )
+
+    tracer = None
+    if trace:
+        from repro.obs import Tracer, set_tracer
+
+        tracer = Tracer()
+        set_tracer(tracer)
 
     print("name,us_per_call,derived")
     failures = []
@@ -33,11 +48,28 @@ def main() -> None:
         bench_dryrun_roofline,
         bench_topology,
     ):
+        name = mod.__name__.rsplit(".", 1)[-1]
         try:
-            mod.run()
+            if tracer is not None:
+                with tracer.span(f"bench.{name}"):
+                    mod.run()
+            else:
+                mod.run()
         except Exception:
             failures.append(mod.__name__)
             traceback.print_exc()
+    if tracer is not None:
+        import os
+
+        from repro.obs import get_registry, write_chrome_trace
+
+        out = write_chrome_trace(
+            tracer.spans,
+            "results/traces/bench_suite.trace.json",
+            process_name="bench_suite",
+        )
+        get_registry().write_json(os.path.join("results", "bench_metrics.json"))
+        print(f"trace: {out}", file=sys.stderr)
     if failures:
         print(f"FAILED: {failures}", file=sys.stderr)
         sys.exit(1)

@@ -89,7 +89,16 @@ def _bcast(coef, npay: int):
 # ---------------------------------------------------------------------------
 
 
-def ir_encode_jit(mesh, axes, ir: ScheduleIR, *, q: int = M31):
+def ir_encode_jit(
+    mesh,
+    axes,
+    ir: ScheduleIR,
+    *,
+    q: int = M31,
+    tracer=None,
+    topo=None,
+    metrics=None,
+):
     """Jitted mesh executor of any :class:`ScheduleIR`: device ``k`` (the
     flattened index over ``axes``, outermost first — exactly how ``P(axes)``
     shards the packet dimension) runs processor ``k``'s program.
@@ -105,6 +114,22 @@ def ir_encode_jit(mesh, axes, ir: ScheduleIR, *, q: int = M31):
     Inputs/outputs are in DEVICE order; for an IR with a non-identity
     ``placement`` (e.g. after ``topo.passes.remap_digits``) the caller
     permutes host-side: device ``placement[k]`` holds logical packet k.
+
+    ``tracer`` (a :class:`repro.obs.trace.Tracer`) opts into per-round
+    telemetry: instead of ONE fused jit over all rounds, each CommRound
+    (and each LocalOp) becomes its own jitted dispatch bracketed by
+    ``block_until_ready`` timestamps, producing exactly one span per
+    CommRound carrying its metadata — round index, transfer count, slots on
+    the wire, the α-β model's predicted µs on ``topo`` (default: the
+    paper's flat network), and the busiest-link calibration features
+    (level/msgs/elems) that ``repro.obs.feed`` refits α/β from. Measured
+    round times also land in the ``metrics`` registry (default: the
+    process-local ``repro.obs.metrics`` one) as ``encode.rounds``,
+    ``encode.ppermutes``, ``encode.bytes_on_wire`` and
+    ``encode.round_us{level=}``. With ``tracer=None`` (the default) the
+    fused path — and its jaxpr, ppermute budget, and HLO discipline — is
+    exactly as before; tracing changes dispatch granularity, never the
+    computed function.
     """
     axes = (axes,) if isinstance(axes, str) else tuple(axes)
     K = 1
@@ -121,9 +146,13 @@ def ir_encode_jit(mesh, axes, ir: ScheduleIR, *, q: int = M31):
         consts.append(shoup_precompute(arr, q))
         return len(consts) - 2
 
-    ops = []  # ("comm", [(pairs, src_slots, dst_slots, mode, coef_idx)]) | ("local", ...)
+    # ("comm", [(pairs, src_slots, dst_slots, mode, coef_idx)], round_no)
+    # | ("local", out_slots, in_slots, coef_idx)
+    ops = []
+    round_no = -1
     for step in ir.steps:
         if isinstance(step, CommRound):
+            round_no += 1
             groups = []
             for g in round_port_groups(step):
                 if g.mode == "store" and len(g.pairs) != K:
@@ -148,7 +177,7 @@ def ir_encode_jit(mesh, axes, ir: ScheduleIR, *, q: int = M31):
                     )
                 )
             if groups:
-                ops.append(("comm", groups))
+                ops.append(("comm", groups, round_no))
         elif isinstance(step, LocalOp):
             if step.coeffs is None:
                 raise ValueError(
@@ -161,54 +190,199 @@ def ir_encode_jit(mesh, axes, ir: ScheduleIR, *, q: int = M31):
         else:  # pragma: no cover
             raise TypeError(f"unknown IR step {type(step).__name__}")
 
-    def body(x, cs):
-        npay = x.ndim - 1
-        zero = jnp.zeros_like(x)
-        buf = {INPUT_SLOT: x}
-        for op in ops:
-            if op[0] == "comm":
-                updates = []
-                for pairs, src_slots, dst_slots, mode, coef_idx in op[1]:
-                    payload = jnp.stack(
-                        [buf.get(s, zero) for s in src_slots], axis=1
-                    )  # (1, n_slots, *pay)
-                    recv = jax.lax.ppermute(payload, axes, pairs)
-                    if coef_idx is not None:
-                        recv = shoup_mul(
-                            recv,
-                            _bcast(cs[coef_idx], npay),
-                            _bcast(cs[coef_idx + 1], npay),
-                            q,
-                        )
-                    for i, ds in enumerate(dst_slots):
-                        updates.append((ds, recv[:, i], mode))
-                for ds, v, mode in updates:  # sends all read pre-round state
-                    buf[ds] = v if mode == "store" else (
-                        madd(buf[ds], v, q) if ds in buf else v
+    def apply_op(op, buf, cs):
+        """One IR step on a slot→array buffer dict (inside shard_map)."""
+        first = next(iter(buf.values()))
+        npay = first.ndim - 1
+        zero = jnp.zeros_like(first)
+        if op[0] == "comm":
+            updates = []
+            for pairs, src_slots, dst_slots, mode, coef_idx in op[1]:
+                payload = jnp.stack(
+                    [buf.get(s, zero) for s in src_slots], axis=1
+                )  # (1, n_slots, *pay)
+                recv = jax.lax.ppermute(payload, axes, pairs)
+                if coef_idx is not None:
+                    recv = shoup_mul(
+                        recv,
+                        _bcast(cs[coef_idx], npay),
+                        _bcast(cs[coef_idx + 1], npay),
+                        q,
                     )
-            else:
-                _, out_slots, in_slots, coef_idx = op
-                c, csh = cs[coef_idx], cs[coef_idx + 1]  # (1, n_out, n_in)
-                new = {}
-                for i, os_ in enumerate(out_slots):
-                    acc = None
-                    for j, is_ in enumerate(in_slots):
-                        term = shoup_mul(
-                            buf.get(is_, zero),
-                            _bcast(c[:, i, j], npay),
-                            _bcast(csh[:, i, j], npay),
-                            q,
-                        )
-                        acc = term if acc is None else madd(acc, term, q)
-                    new[os_] = acc
-                buf = new
-        return buf[ir.out_slot]
+                for i, ds in enumerate(dst_slots):
+                    updates.append((ds, recv[:, i], mode))
+            for ds, v, mode in updates:  # sends all read pre-round state
+                buf[ds] = v if mode == "store" else (
+                    madd(buf[ds], v, q) if ds in buf else v
+                )
+            return buf
+        _, out_slots, in_slots, coef_idx = op
+        c, csh = cs[coef_idx], cs[coef_idx + 1]  # (1, n_out, n_in)
+        new = {}
+        for i, os_ in enumerate(out_slots):
+            acc = None
+            for j, is_ in enumerate(in_slots):
+                term = shoup_mul(
+                    buf.get(is_, zero),
+                    _bcast(c[:, i, j], npay),
+                    _bcast(csh[:, i, j], npay),
+                    q,
+                )
+                acc = term if acc is None else madd(acc, term, q)
+            new[os_] = acc
+        return new
 
-    mapped = _smap(
-        body, mesh, in_specs=(P(axes), P(axes)), out_specs=P(axes)
-    )
     cs_dev = [jnp.asarray(a) for a in consts]
-    return jax.jit(lambda x: mapped(x, cs_dev))
+
+    if tracer is None:
+        def body(x, cs):
+            buf = {INPUT_SLOT: x}
+            for op in ops:
+                buf = apply_op(op, buf, cs)
+            return buf[ir.out_slot]
+
+        mapped = _smap(
+            body, mesh, in_specs=(P(axes), P(axes)), out_specs=P(axes)
+        )
+        return jax.jit(lambda x: mapped(x, cs_dev))
+    return _traced_runner(
+        mesh, axes, ir, ops, apply_op, cs_dev, tracer, topo, metrics
+    )
+
+
+def _traced_runner(mesh, axes, ir, ops, apply_op, cs_dev, tracer, topo, metrics):
+    """The opt-in per-round dispatch path of :func:`ir_encode_jit`: one
+    jitted shard_map per IR step, each bracketed by ``block_until_ready``
+    timestamps inside a tracer span. Slot liveness is tracked statically so
+    every step's buffer is a fixed tuple of (K, *payload) arrays; semantics
+    match the fused body exactly (missing slots read as 0 in both paths)."""
+    from repro.core.ir import ir_permute_count as _pc
+    from repro.obs.metrics import get_registry
+    from repro.topo.calibrate import round_features
+    from repro.topo.model import FullyConnected, schedule_time
+
+    if topo is None:
+        topo = FullyConnected(ir.K)
+    reg = metrics if metrics is not None else get_registry()
+
+    # static liveness: which slots hold data before each op
+    specs = []  # (kind, in_slots, out_slots, op)
+    live: tuple = (INPUT_SLOT,)
+    for op in ops:
+        if op[0] == "comm":
+            writes = {ds for g in op[1] for ds in g[2]}
+            outs = tuple(sorted(set(live) | writes))
+        else:
+            outs = tuple(sorted(op[1]))
+        specs.append((op[0], live, outs, op))
+        live = outs
+
+    def make_step(op, ins, outs):
+        def step(bufs, cs):
+            buf = dict(zip(ins, bufs))
+            buf = apply_op(op, buf, cs)
+            zero = jnp.zeros_like(bufs[0])
+            return tuple(buf.get(s, zero) for s in outs)
+
+        return jax.jit(
+            _smap(step, mesh, in_specs=(P(axes), P(axes)), out_specs=P(axes))
+        )
+
+    step_fns = [make_step(op, ins, outs) for _, ins, outs, op in specs]
+
+    # per-comm-op metadata: the round's message map and its derived stats
+    comm_meta = {}
+    for idx, (kind, _, _, op) in enumerate(specs):
+        if kind != "comm":
+            continue
+        msgs: dict = {}
+        wire_slots = 0
+        n_transfers = 0
+        max_slots = 0
+        for pairs, src_slots, _, _, _ in op[1]:
+            n_transfers += len(pairs)
+            wire_slots += len(pairs) * len(src_slots)
+            max_slots = max(max_slots, len(src_slots))
+            for s, d in pairs:
+                msgs[(s, d)] = msgs.get((s, d), 0) + len(src_slots)
+        feats = round_features([msgs], topo)
+        comm_meta[idx] = {
+            "round": op[2],
+            "msgs_map": msgs,
+            "transfers": n_transfers,
+            "ppermutes": len(op[1]),
+            "slots": max_slots,
+            "wire_slots": wire_slots,
+            "feature": feats[0] if feats else None,
+        }
+    n_rounds = len(comm_meta)
+    total_ppermutes = _pc(ir)
+
+    def run(x):
+        x = jnp.asarray(x)
+        payload_elems = 1
+        for d in x.shape[1:]:
+            payload_elems *= int(d)
+        with tracer.span(
+            "ir_encode",
+            algorithm=ir.algorithm,
+            K=ir.K,
+            p=ir.p,
+            rounds=n_rounds,
+            ppermutes=total_ppermutes,
+            payload_elems=payload_elems,
+        ):
+            bufs = (x,)
+            jax.block_until_ready(bufs)
+            for idx, (kind, ins, outs, op) in enumerate(specs):
+                fn = step_fns[idx]
+                if kind == "comm":
+                    meta = comm_meta[idx]
+                    pred_us = (
+                        schedule_time(
+                            topo, [meta["msgs_map"]], payload_elems
+                        ).total
+                        * 1e6
+                    )
+                    feat = meta["feature"]
+                    attrs = {
+                        "algorithm": ir.algorithm,
+                        "comm_round": meta["round"],
+                        "transfers": meta["transfers"],
+                        "ppermutes": meta["ppermutes"],
+                        "slots": meta["slots"],
+                        "wire_slots": meta["wire_slots"],
+                        "payload_elems": payload_elems,
+                        "predicted_us": pred_us,
+                    }
+                    if feat is not None:
+                        attrs.update(
+                            level=feat["level"],
+                            msgs=feat["msgs"],
+                            elems=feat["elems"],
+                        )
+                    with tracer.span(f"round[{meta['round']}]", **attrs) as sp:
+                        bufs = fn(bufs, cs_dev)
+                        jax.block_until_ready(bufs)
+                    reg.counter("encode.rounds").inc()
+                    reg.counter("encode.ppermutes").inc(meta["ppermutes"])
+                    reg.counter("encode.bytes_on_wire").inc(
+                        meta["wire_slots"] * payload_elems * 4
+                    )
+                    if feat is not None:
+                        reg.histogram(
+                            "encode.round_us", level=feat["level"]
+                        ).observe(sp.dur_us)
+                    else:
+                        reg.histogram("encode.round_us").observe(sp.dur_us)
+                else:
+                    with tracer.span(f"local[{idx}]", kind="local"):
+                        bufs = fn(bufs, cs_dev)
+                        jax.block_until_ready(bufs)
+            out_by_slot = dict(zip(outs, bufs)) if specs else {INPUT_SLOT: x}
+            return out_by_slot.get(ir.out_slot, jnp.zeros_like(x))
+
+    return run
 
 
 # ---------------------------------------------------------------------------

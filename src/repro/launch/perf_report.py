@@ -1,7 +1,8 @@
-"""Render EXPERIMENTS.md §Perf from results/perf_iterations.jsonl, and the
+"""Render EXPERIMENTS.md §Perf from results/perf_iterations.jsonl, the
 topology validation table from results/BENCH_topology.json (predicted α-β
 time vs. measured wall time per algorithm — the autotuner calibration
-input)."""
+input), and the per-round predicted-vs-measured drift table from a trace
+file (:func:`render_drift` — the observability layer's report)."""
 
 from __future__ import annotations
 
@@ -70,6 +71,55 @@ def render_topology(path: str = "results/BENCH_topology.json") -> str:
     return "\n".join(out)
 
 
+def render_drift(source, threshold: float = 0.5) -> str:
+    """Per-round predicted-vs-measured drift table, sorted by relative
+    error (worst first). ``source`` is a trace file path (the JSONL span
+    sink or Chrome trace ``dist.collectives.ir_encode_jit(tracer=...)``
+    emitted) or an in-memory span list; rows whose
+    |measured−predicted|/predicted exceeds ``threshold`` are flagged ⚠ —
+    on real hardware those are the rounds whose α/β constants (or
+    schedule) are mispriced and should be re-fed through
+    ``obs.feed.feed_calibration``."""
+    from repro.obs.feed import drift_rows
+
+    if isinstance(source, str):
+        from repro.obs.export import read_spans
+
+        source = read_spans(source)
+    rows = drift_rows(source, threshold)
+    out = [
+        f"Per-round drift — predicted α-β µs vs. measured wall µs "
+        f"(flag threshold: rel err > {threshold:g})",
+        "",
+        "| round | algorithm | level | predicted µs | measured µs | rel err | |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lvl = "—" if r["level"] is None else str(r["level"])
+        out.append(
+            f"| {r['round']} | {r['algorithm']} | {lvl} | "
+            f"{r['predicted_us']:.1f} | {r['measured_us']:.1f} | "
+            f"{r['rel_err']:.2f} | {'⚠' if r['flagged'] else ''} |"
+        )
+    if not rows:
+        out.append("| — | — | — | — | — | — | (no traced rounds) |")
+    out.append("")
+    n_flag = sum(r["flagged"] for r in rows)
+    out.append(
+        f"{n_flag}/{len(rows)} rounds flagged. Forced-host CPU traces "
+        "always drift (collective emulation, not ICI); refit with "
+        "`obs.feed.feed_calibration` to re-price from these measurements."
+    )
+    return "\n".join(out)
+
+
 if __name__ == "__main__":
     arg = sys.argv[1] if len(sys.argv) > 1 else "results/perf_iterations.jsonl"
-    print(render_topology(arg) if arg.endswith(".json") else render(arg))
+    if arg.endswith(".jsonl") and "trace" in arg:
+        print(render_drift(arg))
+    elif arg.endswith(".trace.json"):
+        print(render_drift(arg))
+    elif arg.endswith(".json"):
+        print(render_topology(arg))
+    else:
+        print(render(arg))

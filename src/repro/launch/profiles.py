@@ -201,7 +201,12 @@ def resolve_profile(
 
     ``calibration`` selects fitted α/β pricing: ``None`` (default) loads
     ``results/BENCH_topology.json`` when present, a path loads that file,
-    ``False`` disables calibration. When fitted per-level costs exist and
+    ``False`` disables calibration. A path ending in ``.jsonl`` or
+    ``.trace.json`` is treated as a span trace emitted by
+    ``dist.collectives.ir_encode_jit(tracer=...)`` and re-fit on the fly
+    via ``obs.feed.fitted_costs_from_trace`` — live telemetry straight
+    into pricing, no intermediate results file. When fitted per-level
+    costs exist and
     the priced topology is a Hierarchy, its level costs are replaced by the
     fit (level counts matching exactly, otherwise the fitted innermost/
     outermost endpoints re-interpolated through
@@ -221,9 +226,19 @@ def resolve_profile(
         topo = production_topology(multi_pod=multi_pod)
     fitted = None
     if calibration is not False:
-        fitted = load_fitted_costs(
-            calibration if isinstance(calibration, str) else None
-        )
+        if isinstance(calibration, str) and calibration.endswith(
+            (".jsonl", ".trace.json")
+        ):
+            from repro.obs.feed import fitted_costs_from_trace
+
+            try:
+                fitted = tuple(fitted_costs_from_trace(calibration))
+            except (OSError, ValueError):  # unreadable/unfittable trace
+                fitted = None
+        else:
+            fitted = load_fitted_costs(
+                calibration if isinstance(calibration, str) else None
+            )
     if fitted is not None and isinstance(topo, Hierarchy):
         from dataclasses import replace as _replace
 

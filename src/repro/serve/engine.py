@@ -6,10 +6,22 @@ per-token decode of the prompt region (keeps one compiled step — the
 latency-optimal path would add a separate prefill graph, which
 launch/dryrun.py exercises at the 32k shapes), then new tokens are sampled
 until max length or EOS.
+
+Observability (``repro.obs``): every ``generate`` records
+``serve.steps`` / ``serve.tokens_per_s`` / ``serve.generate_ms`` into the
+process-local metrics registry; passing ``tracer=`` to the constructor
+additionally wraps each decode step in a span and feeds the
+``serve.step_us`` latency histogram (this forces a device sync per step —
+opt-in, like the traced encode path). EOS termination is checked only
+every ``eos_check_every`` steps (plus the final step) instead of per
+token: the ``bool(jnp.all(...))`` check is a device→host round-trip, and
+batching it keeps the decode loop async; the avoided syncs are counted in
+``serve.eos_syncs_saved``.
 """
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 
 import numpy as np
@@ -28,11 +40,29 @@ class GenerationResult:
 
 
 class Engine:
-    def __init__(self, model: Model, params, max_len: int = 256, mesh=None, rules=None):
+    def __init__(
+        self,
+        model: Model,
+        params,
+        max_len: int = 256,
+        mesh=None,
+        rules=None,
+        tracer=None,
+        metrics=None,
+    ):
         self.model = model
         self.params = params
         self.max_len = max_len
         self._step = jax.jit(make_decode_step(model, mesh, rules))
+        self._tracer = tracer
+        self._metrics = metrics
+
+    def _registry(self):
+        if self._metrics is not None:
+            return self._metrics
+        from repro.obs.metrics import get_registry
+
+        return get_registry()
 
     def generate(
         self,
@@ -41,6 +71,7 @@ class Engine:
         eos_id: int | None = None,
         greedy: bool = True,
         seed: int = 0,
+        eos_check_every: int = 8,
     ) -> GenerationResult:
         B = len(prompts)
         cfg = self.model.cfg
@@ -59,11 +90,20 @@ class Engine:
             )
         toks_j = jnp.asarray(toks)
         key = jax.random.key(seed)
+        reg = self._registry()
+        tracer = self._tracer
         steps = 0
+        t_start = time.perf_counter()
         for t in range(total - 1):
             cur = toks_j[:, t : t + 1]
             pos = jnp.full((B,), t, jnp.int32)
-            logits, cache = self._step(self.params, cache, cur, pos)
+            if tracer is not None:
+                with tracer.span("serve.step", step=steps, pos=t, batch=B) as sp:
+                    logits, cache = self._step(self.params, cache, cur, pos)
+                    jax.block_until_ready(logits)
+                reg.histogram("serve.step_us").observe(sp.dur_us)
+            else:
+                logits, cache = self._step(self.params, cache, cur, pos)
             steps += 1
             lg = logits[:, 0, : cfg.vocab_size]
             if greedy:
@@ -75,6 +115,19 @@ class Engine:
             write = (t + 1) >= jnp.asarray(plen)
             new_col = jnp.where(write, nxt, toks_j[:, t + 1])
             toks_j = toks_j.at[:, t + 1].set(new_col)
-            if eos_id is not None and bool(jnp.all(jnp.any(toks_j == eos_id, axis=1))):
-                break
+            if eos_id is not None:
+                # the all-sequences-done check is a device→host sync; batch
+                # it every eos_check_every steps (and on the last step) so
+                # the decode loop stays asynchronous in between
+                due = steps % max(eos_check_every, 1) == 0 or t == total - 2
+                if due:
+                    if bool(jnp.all(jnp.any(toks_j == eos_id, axis=1))):
+                        break
+                else:
+                    reg.counter("serve.eos_syncs_saved").inc()
+        wall_s = time.perf_counter() - t_start
+        reg.counter("serve.steps").inc(steps)
+        reg.gauge("serve.generate_ms").set(wall_s * 1e3)
+        if wall_s > 0:
+            reg.gauge("serve.tokens_per_s").set(steps * B / wall_s)
         return GenerationResult(tokens=np.asarray(toks_j), steps=steps)

@@ -16,6 +16,14 @@ into one :class:`~repro.topo.model.LinkCost` per level — ready to pass as
 ``Hierarchy(levels, costs=fitted)`` or compare against
 ``default_level_costs``. This is the ROADMAP's "fit per-level α/β from
 sweeps instead of the v5e constants" item.
+
+Two measurement sources feed the same fit: the offline aggregate sweep
+(whole-encode wall times × analytic :func:`round_features` rows, as the
+benchmark's ``calibration.samples``) and the live traced path —
+``dist.collectives.ir_encode_jit(tracer=...)`` stamps each round span with
+its (level, msgs, elems) feature, and ``repro.obs.feed`` turns those spans
+into per-round measurements, refits, and persists exactly where
+:func:`load_fitted_costs` reads.
 """
 
 from __future__ import annotations

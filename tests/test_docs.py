@@ -23,7 +23,7 @@ LINK_RE = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
 # `topo/autotune.py`, `dist.collectives.multilevel_encode_jit`,
 # `launch.profiles.resolve_profile`
 SYMBOL_RE = re.compile(
-    r"`(?:repro\.)?(topo|dist|launch|coded|core)\.([A-Za-z_][\w.]*)(?:\([^`]*\))?`",
+    r"`(?:repro\.)?(topo|dist|launch|coded|core|obs)\.([A-Za-z_][\w.]*)(?:\([^`]*\))?`",
     re.DOTALL,
 )
 
@@ -31,8 +31,10 @@ SYMBOL_RE = re.compile(
 def test_docs_exist_and_are_linked_from_readme():
     assert os.path.exists(os.path.join(REPO, "docs", "ARCHITECTURE.md"))
     assert os.path.exists(os.path.join(REPO, "docs", "TOPOLOGY.md"))
+    assert os.path.exists(os.path.join(REPO, "docs", "OBSERVABILITY.md"))
     readme = open(os.path.join(REPO, "README.md")).read()
     assert "docs/ARCHITECTURE.md" in readme and "docs/TOPOLOGY.md" in readme
+    assert "docs/OBSERVABILITY.md" in readme
 
 
 @pytest.mark.parametrize("path", DOCS, ids=[os.path.relpath(p, REPO) for p in DOCS])
@@ -119,5 +121,15 @@ def test_public_topo_and_dist_api_is_documented():
         "load_fitted_costs",
         "generator_kind_for",
         "Torus3D",
+        # the observability layer (PR 7)
+        "Tracer",
+        "write_chrome_trace",
+        "read_spans",
+        "MetricsRegistry",
+        "get_registry",
+        "feed_calibration",
+        "fitted_costs_from_trace",
+        "render_drift",
+        "drift_rows",
     ]:
         assert name in all_docs, f"public symbol {name} not mentioned in docs"

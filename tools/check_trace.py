@@ -1,0 +1,245 @@
+#!/usr/bin/env python
+"""Schema-check observability artifacts (CI gate for the telemetry layer).
+
+Two kinds, auto-detected from content (or forced with ``--kind``):
+
+* ``trace`` — a Chrome Trace Event file emitted by
+  ``repro.obs.export.write_chrome_trace`` (or the JSONL span sink):
+  ``traceEvents`` array, each event ``ph`` ∈ {X, B, E, M}, numeric
+  ``ts``/``dur`` ≥ 0, events sorted by start time, and every traced
+  comm-round span (``args.comm_round``) carrying its α-β prediction
+  (``args.predicted_us``) — the attribute the drift report and the live
+  calibration feed depend on.
+* ``bench`` — ``results/BENCH_topology.json``: the sweep/prediction record
+  plus the ``calibration`` block, whose ``samples`` rows must stay
+  refit-compatible (``{payload_elems, wall_s, rounds: [{level, msgs,
+  elems}]}`` — ``topo.calibrate.fit_level_costs``'s input contract) and
+  whose ``fitted_level_costs`` rows must stay loader-compatible
+  (``{level, alpha_s, beta_s_per_elem}`` —
+  ``topo.calibrate.load_fitted_costs``'s contract).
+
+The validator is a small hand-rolled structural checker (dependency-free on
+purpose — ``jsonschema`` is not one of the project's declared deps), with a
+declarative schema dialect covering exactly what these two files need:
+``{"type": ...}``, ``required``/``properties``, ``items``, ``enum``,
+``minimum``. Exits non-zero with a path-qualified error message on the
+first violation.
+
+Usage::
+
+    python tools/check_trace.py results/traces/bench_topology.trace.json
+    python tools/check_trace.py --kind bench results/BENCH_topology.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+_TYPES = {
+    "object": dict,
+    "array": list,
+    "string": str,
+    "number": (int, float),
+    "integer": int,
+    "boolean": bool,
+}
+
+
+def validate(value, schema: dict, path: str = "$") -> list[str]:
+    """Structural check of ``value`` against the mini schema dialect.
+    Returns a list of human-readable violations (empty = valid)."""
+    errs: list[str] = []
+    t = schema.get("type")
+    if t is not None:
+        expected = _TYPES[t]
+        ok = isinstance(value, expected)
+        if ok and t in ("number", "integer") and isinstance(value, bool):
+            ok = False  # bool is an int subclass; never a valid number here
+        if not ok:
+            return [f"{path}: expected {t}, got {type(value).__name__}"]
+    if "enum" in schema and value not in schema["enum"]:
+        errs.append(f"{path}: {value!r} not in {schema['enum']}")
+    if "minimum" in schema and isinstance(value, (int, float)):
+        if value < schema["minimum"]:
+            errs.append(f"{path}: {value} < minimum {schema['minimum']}")
+    if t == "object":
+        for key in schema.get("required", ()):
+            if key not in value:
+                errs.append(f"{path}: missing required key {key!r}")
+        for key, sub in schema.get("properties", {}).items():
+            if key in value:
+                errs.extend(validate(value[key], sub, f"{path}.{key}"))
+    if t == "array" and "items" in schema:
+        for i, item in enumerate(value):
+            errs.extend(validate(item, schema["items"], f"{path}[{i}]"))
+    return errs
+
+
+#: per-event schema for the Chrome Trace Event Format subset we emit
+TRACE_EVENT_SCHEMA = {
+    "type": "object",
+    "required": ["name", "ph", "pid", "tid"],
+    "properties": {
+        "name": {"type": "string"},
+        "ph": {"type": "string", "enum": ["X", "B", "E", "M"]},
+        "pid": {"type": "integer", "minimum": 0},
+        "tid": {"type": "integer", "minimum": 0},
+        "ts": {"type": "number", "minimum": 0},
+        "dur": {"type": "number", "minimum": 0},
+        "args": {"type": "object"},
+    },
+}
+
+TRACE_SCHEMA = {
+    "type": "object",
+    "required": ["traceEvents"],
+    "properties": {
+        "traceEvents": {"type": "array", "items": TRACE_EVENT_SCHEMA},
+    },
+}
+
+_FEATURE_ROW = {
+    "type": "object",
+    "required": ["level", "msgs", "elems"],
+    "properties": {
+        "level": {"type": "integer", "minimum": 0},
+        "msgs": {"type": "integer", "minimum": 0},
+        "elems": {"type": "integer", "minimum": 0},
+    },
+}
+
+_COST_ROW = {
+    "type": "object",
+    "required": ["level", "alpha_s", "beta_s_per_elem"],
+    "properties": {
+        "level": {"type": "integer", "minimum": 0},
+        "alpha_s": {"type": "number", "minimum": 0},
+        "beta_s_per_elem": {"type": "number", "minimum": 0},
+    },
+}
+
+_SAMPLE_ROW = {
+    "type": "object",
+    "required": ["payload_elems", "wall_s", "rounds"],
+    "properties": {
+        "payload_elems": {"type": "integer", "minimum": 1},
+        "wall_s": {"type": "number", "minimum": 0},
+        "rounds": {"type": "array", "items": _FEATURE_ROW},
+    },
+}
+
+BENCH_SCHEMA = {
+    "type": "object",
+    "required": [
+        "K", "p", "payload_elems", "mesh", "topology",
+        "autotuner_choice", "measured_us", "measured_s", "predicted",
+        "calibration",
+    ],
+    "properties": {
+        "K": {"type": "integer", "minimum": 2},
+        "p": {"type": "integer", "minimum": 1},
+        "payload_elems": {"type": "integer", "minimum": 1},
+        "mesh": {"type": "string"},
+        "topology": {"type": "string"},
+        "autotuner_choice": {"type": "string"},
+        "measured_us": {"type": "object"},
+        "measured_s": {"type": "object"},
+        "predicted": {"type": "object"},
+        "calibration": {
+            "type": "object",
+            "required": ["samples", "fitted_level_costs"],
+            "properties": {
+                "samples": {"type": "array", "items": _SAMPLE_ROW},
+                "fitted_level_costs": {"type": "array", "items": _COST_ROW},
+            },
+        },
+    },
+}
+
+
+def check_trace(record: dict) -> list[str]:
+    """TRACE_SCHEMA + the semantic invariants the exporter guarantees:
+    start-time-sorted events and predicted_us on every comm-round span."""
+    errs = validate(record, TRACE_SCHEMA)
+    if errs:
+        return errs
+    prev_ts = None
+    for i, ev in enumerate(record["traceEvents"]):
+        if ev["ph"] == "M":
+            continue
+        if ev["ph"] in ("X", "B") and "ts" not in ev:
+            errs.append(f"$.traceEvents[{i}]: {ev['ph']} event without ts")
+            continue
+        ts = ev.get("ts")
+        if prev_ts is not None and ts is not None and ts < prev_ts:
+            errs.append(
+                f"$.traceEvents[{i}]: ts {ts} < previous {prev_ts} "
+                "(events must be start-time sorted)"
+            )
+        if ts is not None:
+            prev_ts = ts
+        args = ev.get("args", {})
+        if "comm_round" in args and "predicted_us" not in args:
+            errs.append(
+                f"$.traceEvents[{i}] ({ev['name']}): comm-round span "
+                "missing predicted_us (the drift/calibration attribute)"
+            )
+    return errs
+
+
+def check_bench(record: dict) -> list[str]:
+    return validate(record, BENCH_SCHEMA)
+
+
+def _jsonl_to_trace(lines: list[dict]) -> dict:
+    """Wrap a JSONL span dump as a trace record so one checker serves both
+    sink formats (the spans carry the same attrs the chrome args do)."""
+    events = []
+    for sp in sorted(lines, key=lambda d: d.get("ts_us", 0.0)):
+        events.append(
+            {
+                "name": sp.get("name", ""),
+                "ph": "X",
+                "pid": 0,
+                "tid": 0,
+                "ts": float(sp.get("ts_us", 0.0)),
+                "dur": max(float(sp.get("dur_us", 0.0)), 0.0),
+                "args": sp.get("attrs", {}),
+            }
+        )
+    return {"traceEvents": events}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("path")
+    ap.add_argument("--kind", choices=["trace", "bench", "auto"], default="auto")
+    args = ap.parse_args(argv)
+    with open(args.path) as fh:
+        text = fh.read()
+    if args.path.endswith(".jsonl"):
+        record = _jsonl_to_trace(
+            [json.loads(l) for l in text.splitlines() if l.strip()]
+        )
+        kind = "trace"
+    else:
+        record = json.loads(text)
+        kind = args.kind
+        if kind == "auto":
+            kind = "trace" if "traceEvents" in record else "bench"
+    errs = check_trace(record) if kind == "trace" else check_bench(record)
+    if errs:
+        for e in errs:
+            print(f"FAIL {e}", file=sys.stderr)
+        return 1
+    n = len(record.get("traceEvents", [])) if kind == "trace" else len(
+        record.get("calibration", {}).get("samples", [])
+    )
+    print(f"OK {args.path}: valid {kind} ({n} {'events' if kind == 'trace' else 'calibration samples'})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

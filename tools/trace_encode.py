@@ -1,0 +1,108 @@
+#!/usr/bin/env python
+"""Trace one multi-level encode end-to-end (the CI observability smoke).
+
+Forces 8 host devices (unless XLA_FLAGS is already set), builds the
+recursive three-level Vandermonde encode on a 2×2×2 pod×slice×chip mesh,
+runs it through ``dist.collectives.ir_encode_jit(tracer=...)`` — one span
+per CommRound with the α-β prediction stamped next to the measured wall
+time — and writes both trace sinks plus the metrics snapshot. The first
+traced call compiles the per-round dispatches, so it is discarded as
+warmup and only the second call's spans are kept (the calibration-grade
+window; see docs/OBSERVABILITY.md).
+
+Usage::
+
+    python tools/trace_encode.py [--out results/traces/encode] \
+        [--feed results/BENCH_topology.json] [--drift]
+
+``--feed`` pushes the traced rounds through ``obs.feed.feed_calibration``
+(refit α/β, persist into the ``calibration`` block where
+``topo.calibrate.load_fitted_costs`` / ``launch.profiles.resolve_profile``
+read it). ``--drift`` prints the per-round predicted-vs-measured table.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default="results/traces/encode",
+                    help="output path prefix (writes <out>.trace.json + <out>.jsonl)")
+    ap.add_argument("--payload", type=int, default=1 << 14,
+                    help="payload elems per source shard")
+    ap.add_argument("--feed", default=None, metavar="PATH",
+                    help="refit α/β from the trace and persist into PATH's calibration block")
+    ap.add_argument("--drift", action="store_true",
+                    help="print the per-round predicted-vs-measured drift table")
+    args = ap.parse_args(argv)
+
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.core.field import M31, Field
+    from repro.core.matrices import distinct_points, random_vector, vandermonde
+    from repro.dist.collectives import ir_encode_jit
+    from repro.launch.mesh import make_mesh
+    from repro.obs import (
+        Tracer,
+        get_registry,
+        write_chrome_trace,
+        write_spans_jsonl,
+    )
+    from repro.topo import Hierarchy, plan_multilevel
+
+    K = 8
+    f = Field(M31)
+    A = np.asarray(vandermonde(f, distinct_points(f, K, seed=0)))
+    mesh = make_mesh((2, 2, 2), ("pod", "slice", "chip"))
+    topo = Hierarchy(levels=(2, 2, 2))
+    ir = plan_multilevel(K, 1, (2, 2, 2)).to_ir(A)
+
+    tracer = Tracer()
+    fn = ir_encode_jit(mesh, ("pod", "slice", "chip"), ir, tracer=tracer, topo=topo)
+    x = jnp.asarray(random_vector(f, (K, args.payload), seed=1).astype(np.uint32))
+    fn(x)  # warmup: compiles every per-round dispatch
+    n0 = len(tracer.spans)
+    out = np.asarray(fn(x))
+    spans = tracer.spans[n0:]
+    fused = ir_encode_jit(mesh, ("pod", "slice", "chip"), ir)
+    assert np.array_equal(out, np.asarray(fused(x))), "traced != fused output"
+    comm = [s for s in spans if "comm_round" in s.attrs]
+    print(f"traced {len(comm)} comm rounds / {len(spans)} spans "
+          f"(schedule: {ir.c1} rounds, {ir.c2} slot-rounds)")
+    assert len(comm) == ir.c1, f"expected {ir.c1} round spans, got {len(comm)}"
+
+    chrome = write_chrome_trace(spans, args.out + ".trace.json",
+                                process_name="trace_encode")
+    jsonl = write_spans_jsonl(spans, args.out + ".jsonl")
+    metrics = args.out + ".metrics.json"
+    get_registry().write_json(metrics)
+    print(f"wrote {chrome}\nwrote {jsonl}\nwrote {metrics}")
+
+    if args.feed:
+        from repro.obs import feed_calibration
+
+        fitted = feed_calibration(spans, args.feed)
+        print(f"fed calibration -> {args.feed}:")
+        for j, c in enumerate(fitted):
+            print(f"  level {j}: alpha={c.alpha:.3e}s beta={c.beta:.3e}s/elem")
+    if args.drift:
+        from repro.launch.perf_report import render_drift
+
+        print()
+        print(render_drift(spans))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -63,6 +63,50 @@ def run():
         f"unfused_us={us_unfused:.1f},hbm_bytes_fused={(radix + 1) * B * P * 4}",
     )
 
+    # the executor's fused LocalOp contraction (ISSUE 8): the exact shape
+    # ir_encode_jit lowers per device — n_out×n_in coefficient rows over a
+    # ≥64k payload — as the madd-folded row-batched Shoup fold ("fused"
+    # kernels mode) vs the legacy per-(i,j) loop ("jnp" mode)
+    import jax
+
+    from repro.core.field import madd, shoup_mul
+
+    n_out, n_in, pay = 15, 8, 1 << 16
+    c = rng.integers(0, q, size=(n_out, n_in), dtype=np.uint32)
+    csh = np.asarray(shoup_precompute(c, q))
+    xs = jnp.asarray(rng.integers(0, q, size=(n_in, pay), dtype=np.uint32))
+    cj, cshj = jnp.asarray(c), jnp.asarray(csh)
+
+    @jax.jit
+    def contraction_fused(xs):
+        acc = None
+        for j in range(n_in):
+            term = shoup_mul(xs[j][None], cj[:, j, None], cshj[:, j, None], q)
+            acc = term if acc is None else madd(acc, term, q)
+        return acc
+
+    @jax.jit
+    def contraction_loop(xs):
+        outs = []
+        for i in range(n_out):
+            acc = None
+            for j in range(n_in):
+                t = shoup_mul(xs[j], cj[i, j], cshj[i, j], q)
+                acc = t if acc is None else madd(acc, t, q)
+            outs.append(acc)
+        return jnp.stack(outs)
+
+    np.testing.assert_array_equal(
+        np.asarray(contraction_fused(xs)), np.asarray(contraction_loop(xs))
+    )
+    us_f = time_fn(contraction_fused, xs, iters=5, metric="bench.localop_fused_us")
+    us_l = time_fn(contraction_loop, xs, iters=5, metric="bench.localop_jnp_us")
+    emit(
+        f"localop_contraction_{n_out}x{n_in}x{pay}_fused",
+        us_f,
+        f"jnp_loop_us={us_l:.1f},speedup={us_l / us_f:.2f}x",
+    )
+
 
 if __name__ == "__main__":
     run()

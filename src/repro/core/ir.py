@@ -86,11 +86,22 @@ class CommRound:
 @dataclass(frozen=True, eq=False)
 class LocalOp:
     """buffer := {out_slots[i]: Σ_j coeffs[k, i, j] · buf[in_slots[j]]}
-    (REPLACES the buffer; missing input slots read as 0)."""
+    (REPLACES the buffer; missing input slots read as 0).
+
+    ``update=True`` switches to read-modify-write semantics: the op writes
+    only its out_slots and every other live slot survives untouched — the
+    form :func:`~repro.topo.passes.pipeline_rounds` needs for its combine
+    steps (``o ← o + τ(o)``), which must not clobber in-flight slots.
+    ``overlap=True`` marks an op whose inputs are independent of the NEXT
+    comm round, i.e. the executor may issue it concurrently with (or fused
+    into the same dispatch as) that round's ppermute; it never changes the
+    op's value semantics, only scheduling/pricing."""
 
     out_slots: tuple[int, ...]
     in_slots: tuple[int, ...]
     coeffs: np.ndarray | None  # (K, n_out, n_in) field elements; None = structure-only
+    update: bool = False
+    overlap: bool = False
 
 
 @dataclass(frozen=True, eq=False)
@@ -230,7 +241,7 @@ def fuse_trivial_rounds(ir: ScheduleIR) -> ScheduleIR:
         if (
             step.coeffs is not None
             and step.out_slots == step.in_slots
-            and live <= set(step.out_slots)
+            and (step.update or live <= set(step.out_slots))
             and np.array_equal(
                 np.asarray(step.coeffs),
                 np.broadcast_to(
@@ -240,7 +251,7 @@ def fuse_trivial_rounds(ir: ScheduleIR) -> ScheduleIR:
             )
         ):
             continue  # identity contraction over every live slot
-        live = set(step.out_slots)
+        live = live | set(step.out_slots) if step.update else set(step.out_slots)
         steps.append(step)
     return replace(ir, steps=tuple(steps))
 

@@ -191,7 +191,11 @@ def interpret(
                         out, field.mul(step.coeffs[:, :, j], cols[:, j][:, None])
                     )
                 for k in range(K):
-                    buf[k] = {s: out[k, i] for i, s in enumerate(step.out_slots)}
+                    if step.update:
+                        for i, s in enumerate(step.out_slots):
+                            buf[k][s] = out[k, i]
+                    else:
+                        buf[k] = {s: out[k, i] for i, s in enumerate(step.out_slots)}
             else:  # pragma: no cover
                 raise TypeError(f"unknown IR step {type(step).__name__}")
     result = np.array(

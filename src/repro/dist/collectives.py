@@ -84,6 +84,60 @@ def _bcast(coef, npay: int):
     return coef.reshape(coef.shape + (1,) * npay)
 
 
+KERNEL_MODES = ("jnp", "fused", "pallas")
+
+
+def _resolve_kernels(kernels: str | None) -> str:
+    """LocalOp lowering mode: ``None`` auto-selects the Pallas kernels on
+    TPU and the batched-jnp fused lowering elsewhere; ``"jnp"`` is the
+    legacy per-coefficient loop kept as the flagged fallback."""
+    if kernels is None:
+        return "pallas" if jax.default_backend() == "tpu" else "fused"
+    if kernels not in KERNEL_MODES:
+        raise ValueError(f"kernels must be one of {KERNEL_MODES} or None, got {kernels!r}")
+    return kernels
+
+
+def _lower_local(step: LocalOp, bake, kernels: str) -> dict:
+    """Strength-reduce one LocalOp for the executor. Rows whose coefficients
+    are uniform across devices split into three classes: all-zero rows write
+    zeros, {0,1}-rows become pure madd chains (the pipeline pass's shadow
+    copies and combines), and the remaining *general* rows are stacked into
+    ONE batched contraction — a single Shoup-multiplied jnp expression in
+    ``fused`` mode, or one ``gf_matmul``/``butterfly_mac`` kernel call in
+    ``pallas`` mode. ``jnp`` keeps the legacy dense per-(i,j) loop."""
+    c = np.asarray(step.coeffs)
+    spec = {
+        "update": step.update,
+        "overlap": step.overlap,
+        "zero": (),
+        "adds": (),
+        "gen": tuple(range(len(step.out_slots))),
+        "coef_idx": None,
+        "dense": kernels == "jnp",
+    }
+    if spec["dense"]:
+        spec["coef_idx"] = bake(c)
+        return spec
+    ones = np.all(c == 1, axis=0)
+    zeros = np.all(c == 0, axis=0)
+    uniform01 = ones | zeros
+    zero_rows, add_rows, gen_rows = [], [], []
+    for i in range(c.shape[1]):
+        if zeros[i].all():
+            zero_rows.append(i)
+        elif uniform01[i].all():
+            add_rows.append((i, tuple(int(j) for j in np.nonzero(ones[i])[0])))
+        else:
+            gen_rows.append(i)
+    spec["zero"] = tuple(zero_rows)
+    spec["adds"] = tuple(add_rows)
+    spec["gen"] = tuple(gen_rows)
+    if gen_rows:
+        spec["coef_idx"] = bake(c[:, gen_rows, :])
+    return spec
+
+
 # ---------------------------------------------------------------------------
 # THE generic executor: any ScheduleIR whose rounds are mesh permutations
 # ---------------------------------------------------------------------------
@@ -98,6 +152,7 @@ def ir_encode_jit(
     tracer=None,
     topo=None,
     metrics=None,
+    kernels: str | None = None,
 ):
     """Jitted mesh executor of any :class:`ScheduleIR`: device ``k`` (the
     flattened index over ``axes``, outermost first — exactly how ``P(axes)``
@@ -129,9 +184,21 @@ def ir_encode_jit(
     ``encode.round_us{level=}``. With ``tracer=None`` (the default) the
     fused path — and its jaxpr, ppermute budget, and HLO discipline — is
     exactly as before; tracing changes dispatch granularity, never the
-    computed function.
+    computed function. An ``overlap=True`` LocalOp (emitted by
+    ``topo.passes.pipeline_rounds``) is merged into the FOLLOWING comm
+    round's dispatch, so its contraction is issued concurrently with the
+    ppermute — the traced ``round[r]`` span carries ``overlap`` attrs.
+
+    ``kernels`` selects the LocalOp lowering: ``"pallas"`` routes general
+    rows through ``gf_matmul``/``butterfly_mac`` (``interpret=`` on non-TPU
+    backends), ``"fused"`` uses ONE batched Shoup contraction per op,
+    ``"jnp"`` keeps the legacy per-coefficient loop, and ``None`` picks
+    ``"pallas"`` on TPU / ``"fused"`` elsewhere. All three are bit-exact
+    (differential suite: tests/test_fused_encode.py).
     """
     axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    kernels = _resolve_kernels(kernels)
+    pallas_interp = jax.default_backend() != "tpu"
     K = 1
     for ax in axes:
         K *= int(mesh.shape[ax])
@@ -185,7 +252,8 @@ def ir_encode_jit(
                     "recompile with the generator matrix"
                 )
             ops.append(
-                ("local", step.out_slots, step.in_slots, bake(step.coeffs))
+                ("local", step.out_slots, step.in_slots,
+                 _lower_local(step, bake, kernels))
             )
         else:  # pragma: no cover
             raise TypeError(f"unknown IR step {type(step).__name__}")
@@ -216,20 +284,62 @@ def ir_encode_jit(
                     madd(buf[ds], v, q) if ds in buf else v
                 )
             return buf
-        _, out_slots, in_slots, coef_idx = op
-        c, csh = cs[coef_idx], cs[coef_idx + 1]  # (1, n_out, n_in)
-        new = {}
-        for i, os_ in enumerate(out_slots):
-            acc = None
-            for j, is_ in enumerate(in_slots):
-                term = shoup_mul(
-                    buf.get(is_, zero),
-                    _bcast(c[:, i, j], npay),
-                    _bcast(csh[:, i, j], npay),
-                    q,
-                )
-                acc = term if acc is None else madd(acc, term, q)
-            new[os_] = acc
+        _, out_slots, in_slots, spec = op
+        xs = [buf.get(s, zero) for s in in_slots]  # all reads pre-op
+        new = dict(buf) if spec["update"] else {}
+        if spec["dense"]:  # legacy "jnp" loop — the flagged fallback path
+            c, csh = cs[spec["coef_idx"]], cs[spec["coef_idx"] + 1]
+            for i, os_ in enumerate(out_slots):
+                acc = None
+                for j in range(len(in_slots)):
+                    term = shoup_mul(
+                        xs[j],
+                        _bcast(c[:, i, j], npay),
+                        _bcast(csh[:, i, j], npay),
+                        q,
+                    )
+                    acc = term if acc is None else madd(acc, term, q)
+                new[os_] = acc
+            return new
+        for i in spec["zero"]:
+            new[out_slots[i]] = zero
+        for i, js in spec["adds"]:
+            acc = zero
+            for j in js:
+                acc = xs[j] if acc is zero else madd(acc, xs[j], q)
+            new[out_slots[i]] = acc
+        if spec["gen"]:
+            c, csh = cs[spec["coef_idx"]], cs[spec["coef_idx"] + 1]
+            stacked = jnp.stack(xs, axis=1)  # (1, n_in, *pay)
+            if kernels == "pallas":
+                from repro.kernels.butterfly.ops import butterfly_mac
+                from repro.kernels.gf_matmul.ops import gf_matmul
+
+                flat = stacked[0].reshape(len(in_slots), -1)  # (n_in, P)
+                if len(spec["gen"]) == 1:
+                    out = butterfly_mac(
+                        flat[:, None, :], c[0], csh[0], q=q,
+                        interpret=pallas_interp,
+                    )  # (1, P)
+                else:
+                    out = gf_matmul(c[0], flat, q=q, interpret=pallas_interp)
+                for r, i in enumerate(spec["gen"]):
+                    new[out_slots[i]] = out[r].reshape(first.shape)
+            else:  # "fused": madd-fold of row-batched Shoup multiplies —
+                # each term is (1, n_gen, *pay) and folds immediately, so
+                # XLA fuses the chain in one pass instead of materializing
+                # the full (n_gen, n_in, *pay) product
+                acc = None
+                for j in range(len(in_slots)):
+                    term = shoup_mul(
+                        xs[j][:, None],
+                        _bcast(c[:, :, j], npay),
+                        _bcast(csh[:, :, j], npay),
+                        q,
+                    )
+                    acc = term if acc is None else madd(acc, term, q)
+                for r, i in enumerate(spec["gen"]):
+                    new[out_slots[i]] = acc[:, r]
         return new
 
     cs_dev = [jnp.asarray(a) for a in consts]
@@ -265,22 +375,48 @@ def _traced_runner(mesh, axes, ir, ops, apply_op, cs_dev, tracer, topo, metrics)
         topo = FullyConnected(ir.K)
     reg = metrics if metrics is not None else get_registry()
 
-    # static liveness: which slots hold data before each op
-    specs = []  # (kind, in_slots, out_slots, op)
-    live: tuple = (INPUT_SLOT,)
-    for op in ops:
-        if op[0] == "comm":
-            writes = {ds for g in op[1] for ds in g[2]}
-            outs = tuple(sorted(set(live) | writes))
+    # An overlap-tagged LocalOp (pipeline_rounds' P_r) merges into the NEXT
+    # comm round's dispatch: one jitted step issues the contraction and the
+    # ppermute together, so XLA can run them concurrently — the traced
+    # round[r] span then covers (and shows) the overlap.
+    grouped = []
+    i = 0
+    while i < len(ops):
+        op = ops[i]
+        if (
+            op[0] == "local"
+            and op[3]["overlap"]
+            and i + 1 < len(ops)
+            and ops[i + 1][0] == "comm"
+        ):
+            grouped.append((op, ops[i + 1]))
+            i += 2
         else:
-            outs = tuple(sorted(op[1]))
-        specs.append((op[0], live, outs, op))
+            grouped.append((op,))
+            i += 1
+
+    # static liveness: which slots hold data before each dispatch group
+    specs = []  # (kind, in_slots, out_slots, group)
+    live: tuple = (INPUT_SLOT,)
+    for grp in grouped:
+        cur = set(live)
+        for op in grp:
+            if op[0] == "comm":
+                cur |= {ds for g in op[1] for ds in g[2]}
+            elif op[3]["update"]:
+                cur |= set(op[1])
+            else:
+                cur = set(op[1])
+        outs = tuple(sorted(cur))
+        kind = "comm" if any(op[0] == "comm" for op in grp) else "local"
+        specs.append((kind, live, outs, grp))
         live = outs
 
-    def make_step(op, ins, outs):
+    def make_step(grp, ins, outs):
         def step(bufs, cs):
             buf = dict(zip(ins, bufs))
-            buf = apply_op(op, buf, cs)
+            for op in grp:
+                buf = apply_op(op, buf, cs)
             zero = jnp.zeros_like(bufs[0])
             return tuple(buf.get(s, zero) for s in outs)
 
@@ -288,13 +424,14 @@ def _traced_runner(mesh, axes, ir, ops, apply_op, cs_dev, tracer, topo, metrics)
             _smap(step, mesh, in_specs=(P(axes), P(axes)), out_specs=P(axes))
         )
 
-    step_fns = [make_step(op, ins, outs) for _, ins, outs, op in specs]
+    step_fns = [make_step(grp, ins, outs) for _, ins, outs, grp in specs]
 
-    # per-comm-op metadata: the round's message map and its derived stats
+    # per-comm-group metadata: the round's message map and its derived stats
     comm_meta = {}
-    for idx, (kind, _, _, op) in enumerate(specs):
+    for idx, (kind, _, _, grp) in enumerate(specs):
         if kind != "comm":
             continue
+        op = next(o for o in grp if o[0] == "comm")
         msgs: dict = {}
         wire_slots = 0
         n_transfers = 0
@@ -306,6 +443,7 @@ def _traced_runner(mesh, axes, ir, ops, apply_op, cs_dev, tracer, topo, metrics)
             for s, d in pairs:
                 msgs[(s, d)] = msgs.get((s, d), 0) + len(src_slots)
         feats = round_features([msgs], topo)
+        overlap_op = next((o for o in grp if o[0] == "local"), None)
         comm_meta[idx] = {
             "round": op[2],
             "msgs_map": msgs,
@@ -314,6 +452,7 @@ def _traced_runner(mesh, axes, ir, ops, apply_op, cs_dev, tracer, topo, metrics)
             "slots": max_slots,
             "wire_slots": wire_slots,
             "feature": feats[0] if feats else None,
+            "overlap_out_slots": len(overlap_op[1]) if overlap_op else 0,
         }
     n_rounds = len(comm_meta)
     total_ppermutes = _pc(ir)
@@ -334,7 +473,7 @@ def _traced_runner(mesh, axes, ir, ops, apply_op, cs_dev, tracer, topo, metrics)
         ):
             bufs = (x,)
             jax.block_until_ready(bufs)
-            for idx, (kind, ins, outs, op) in enumerate(specs):
+            for idx, (kind, ins, outs, grp) in enumerate(specs):
                 fn = step_fns[idx]
                 if kind == "comm":
                     meta = comm_meta[idx]
@@ -355,6 +494,9 @@ def _traced_runner(mesh, axes, ir, ops, apply_op, cs_dev, tracer, topo, metrics)
                         "payload_elems": payload_elems,
                         "predicted_us": pred_us,
                     }
+                    if meta["overlap_out_slots"]:
+                        attrs["overlap"] = True
+                        attrs["overlap_out_slots"] = meta["overlap_out_slots"]
                     if feat is not None:
                         attrs.update(
                             level=feat["level"],
@@ -413,6 +555,20 @@ def expected_permute_count(plan: PrepareShootPlan) -> int:
     return count
 
 
+def _apply_pipeline(ir: ScheduleIR, pipeline: str, payload_elems: int = 1 << 16):
+    """Apply a named ``topo.passes`` pipeline at dispatch time (e.g.
+    ``pipeline="pipeline"`` for the software-pipelined rounds picked by the
+    autotuner / a launch profile). Priced against a flat fabric at a
+    representative payload; comm rounds are never touched, so the entry
+    point's ppermute budget check still binds the rewritten IR."""
+    if not pipeline:
+        return ir
+    from repro.topo.model import FullyConnected
+    from repro.topo.passes import PIPELINES
+
+    return PIPELINES[pipeline].apply(ir, FullyConnected(ir.K), payload_elems)
+
+
 def _check_budget(ir: ScheduleIR, budget: int):
     n = ir_permute_count(ir)
     if n > budget:
@@ -421,7 +577,16 @@ def _check_budget(ir: ScheduleIR, budget: int):
         )
 
 
-def ps_encode_jit(mesh, axis: str, A: np.ndarray, *, p: int = 1, q: int = M31):
+def ps_encode_jit(
+    mesh,
+    axis: str,
+    A: np.ndarray,
+    *,
+    p: int = 1,
+    q: int = M31,
+    kernels: str | None = None,
+    pipeline: str = "",
+):
     """Jitted mesh executor of the universal encode: ``out = x @ A`` over
     GF(q) for ANY K×K matrix A, K = mesh.shape[axis].
 
@@ -435,9 +600,9 @@ def ps_encode_jit(mesh, axis: str, A: np.ndarray, *, p: int = 1, q: int = M31):
     if A.shape != (K, K):
         raise ValueError(f"A must be ({K}, {K}) to match mesh axis {axis!r}, got {A.shape}")
     plan = plan_prepare_shoot(K, p)
-    ir = plan.to_ir(A, q=q)
+    ir = _apply_pipeline(plan.to_ir(A, q=q), pipeline)
     _check_budget(ir, expected_permute_count(plan))
-    return ir_encode_jit(mesh, axis, ir, q=q), plan
+    return ir_encode_jit(mesh, axis, ir, q=q, kernels=kernels), plan
 
 
 def allgather_encode_jit(mesh, axis: str, A: np.ndarray, *, q: int = M31):
@@ -497,6 +662,8 @@ def hierarchical_encode_jit(
     *,
     p: int = 1,
     q: int = M31,
+    kernels: str | None = None,
+    pipeline: str = "",
 ):
     """Jitted two-level mesh executor of the universal encode: ``out = x @ A``
     over GF(q) for ANY K×K matrix A, K = mesh.shape[inter_axis] ×
@@ -530,9 +697,12 @@ def hierarchical_encode_jit(
             f"({inter_axis!r}×{intra_axis!r}), got {A.shape}"
         )
     plan = plan_hierarchical(K, p, k_intra=I)
-    ir = plan.to_ir(A, q=q)
+    ir = _apply_pipeline(plan.to_ir(A, q=q), pipeline)
     _check_budget(ir, expected_hier_permute_count(plan))
-    return ir_encode_jit(mesh, (inter_axis, intra_axis), ir, q=q), plan
+    return (
+        ir_encode_jit(mesh, (inter_axis, intra_axis), ir, q=q, kernels=kernels),
+        plan,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -555,7 +725,16 @@ def expected_multilevel_permute_count(plan) -> int:
     return count
 
 
-def multilevel_encode_jit(mesh, axes, A: np.ndarray, *, p: int = 1, q: int = M31):
+def multilevel_encode_jit(
+    mesh,
+    axes,
+    A: np.ndarray,
+    *,
+    p: int = 1,
+    q: int = M31,
+    kernels: str | None = None,
+    pipeline: str = "",
+):
     """Jitted N-level mesh executor of the universal encode: ``out = x @ A``
     over GF(q) for ANY K×K matrix A, K = Π mesh.shape[ax] over ``axes``.
 
@@ -590,9 +769,9 @@ def multilevel_encode_jit(mesh, axes, A: np.ndarray, *, p: int = 1, q: int = M31
             f"A must be ({K}, {K}) to match mesh axes {axes!r}, got {A.shape}"
         )
     plan = plan_multilevel(K, p, levels)
-    ir = plan.to_ir(A, q=q)
+    ir = _apply_pipeline(plan.to_ir(A, q=q), pipeline)
     _check_budget(ir, expected_multilevel_permute_count(plan))
-    return ir_encode_jit(mesh, axes, ir, q=q), plan
+    return ir_encode_jit(mesh, axes, ir, q=q, kernels=kernels), plan
 
 
 # ---------------------------------------------------------------------------
@@ -601,7 +780,14 @@ def multilevel_encode_jit(mesh, axes, A: np.ndarray, *, p: int = 1, q: int = M31
 
 
 def butterfly_jit(
-    mesh, axis: str, *, p: int = 1, q: int = NTT, inverse: bool = False
+    mesh,
+    axis: str,
+    *,
+    p: int = 1,
+    q: int = NTT,
+    inverse: bool = False,
+    kernels: str | None = None,
+    pipeline: str = "",
 ):
     """Jitted mesh butterfly: forward computes ``x @ butterfly_target_matrix``
     (the digit-reversed K-point DFT), inverse undoes it exactly (Lemma 5).
@@ -613,6 +799,6 @@ def butterfly_jit(
     """
     K = int(mesh.shape[axis])
     plan = plan_butterfly(K, p, q)
-    ir = plan.to_ir(inverse=inverse)
+    ir = _apply_pipeline(plan.to_ir(inverse=inverse), pipeline)
     _check_budget(ir, plan.H * p)
-    return ir_encode_jit(mesh, axis, ir, q=q), plan
+    return ir_encode_jit(mesh, axis, ir, q=q, kernels=kernels), plan

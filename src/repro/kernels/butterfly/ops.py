@@ -38,7 +38,8 @@ def butterfly_mac(
     twp = jnp.pad(tw.astype(jnp.uint32), ((0, pb), (0, 0)))
     twsp = jnp.pad(tw_sh.astype(jnp.uint32), ((0, pb), (0, 0)))
     out = butterfly_mac_pallas(
-        flat.astype(jnp.uint32), twp, twsp, q=q, block_b=bb, block_p=bp
+        flat.astype(jnp.uint32), twp, twsp, q=q, block_b=bb, block_p=bp,
+        interpret=interpret,
     )
     return out[:B, :P].reshape(B, *payload)
 

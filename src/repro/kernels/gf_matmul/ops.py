@@ -47,6 +47,10 @@ def gf_matmul(
     """
     M, K = a.shape
     _, N = b.shape
+    if M == 0 or N == 0 or K == 0:
+        # empty operand (e.g. a slot emptied by fuse_trivial_rounds): the
+        # mod-q sum over zero terms is zero — don't pad up into the kernel
+        return jnp.zeros((M, N), dtype=jnp.uint32)
     bm = min(block_m, _round_up(M, 8))
     bn = min(block_n, _round_up(N, 128))
     bk = min(block_k, _round_up(K, 8))
@@ -73,6 +77,8 @@ def gf_matmul_batched(
     """
     B, M, K = a.shape
     _, _, N = b.shape
+    if M == 0 or N == 0 or K == 0:
+        return jnp.zeros((B, M, N), dtype=jnp.uint32)
     bm = min(128, _round_up(M, 8))
     bn = min(128, _round_up(N, 128))
     bk = min(512, _round_up(K, 8))

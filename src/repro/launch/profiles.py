@@ -151,7 +151,11 @@ class EncodeProfile:
     compiled, pass-rewritten schedule — the exact object
     ``dist.collectives.ir_encode_jit`` executes (structure-only here: the
     executors recompile with the generator matrix at dispatch and re-apply
-    the named pipeline). ``fitted_costs`` records the calibrated per-level
+    the named pipeline, e.g. ``pipeline="pipeline"`` for the
+    comm/compute-overlap rewrite). ``kernels`` is the LocalOp lowering the
+    executors should use (None = auto: Pallas kernels on TPU, the batched
+    fused-jnp contraction elsewhere; "jnp" = the legacy unfused loop kept
+    behind the flag). ``fitted_costs`` records the calibrated per-level
     α/β the pricing used (None = v5e defaults)."""
 
     topology: object  # repro.topo Topology the choice was priced on
@@ -160,6 +164,7 @@ class EncodeProfile:
     tune: object  # full repro.topo.TuneResult (candidate table)
     pipeline: str = ""  # winning PassPipeline name ("" = un-rewritten)
     fitted_costs: tuple | None = None  # calibrated LinkCosts used for pricing
+    kernels: str | None = None  # ir_encode_jit LocalOp lowering (None = auto)
 
     @property
     def levels(self) -> tuple[int, ...]:
@@ -181,6 +186,7 @@ def resolve_profile(
     measured: dict[str, float] | None = None,
     generator: str | None = None,
     calibration: str | bool | None = None,
+    kernels: str | None = None,
 ) -> EncodeProfile:
     """Pick the coded-checkpoint DP-axis encode algorithm from the mesh
     topology via the autotuner (ROADMAP: "wire the autotuner into launch/").
@@ -211,7 +217,11 @@ def resolve_profile(
     fit (level counts matching exactly, otherwise the fitted innermost/
     outermost endpoints re-interpolated through
     ``topo.model.default_level_costs``) so candidate prices — and the chosen
-    (algorithm, pipeline) — reflect measured hardware."""
+    (algorithm, pipeline) — reflect measured hardware.
+
+    ``kernels`` is recorded verbatim on the profile for dispatch-time use
+    (``dist.collectives`` LocalOp lowering mode: None = auto-select by
+    backend, "pallas"/"fused"/"jnp" to force)."""
     from repro.core.field import M31
     from repro.launch.mesh import production_topology, topology_for_mesh
     from repro.topo import autotune
@@ -272,4 +282,5 @@ def resolve_profile(
         tune=result,
         pipeline=result.chosen.pipeline,
         fitted_costs=fitted,
+        kernels=kernels,
     )

@@ -151,6 +151,18 @@ def _levels_for(topo: Topology, K: int) -> tuple[int, ...] | None:
     return None
 
 
+def _priced(ir: ScheduleIR, low: LoweredSchedule, topo: Topology, payload_elems: int):
+    """Comm estimate from the lowered schedule plus the MAC-priced local
+    compute (with ``pipeline_rounds``' overlap credit) — ``total`` carries
+    both terms, ``per_round`` stays comm-only (the round-count contracts the
+    tests pin)."""
+    from .passes import ir_compute_time
+
+    est = low.time(topo, payload_elems)
+    extra = ir_compute_time(ir, topo, payload_elems)
+    return replace(est, total=est.total + extra) if extra else est
+
+
 def candidates_for(
     K: int,
     p: int,
@@ -173,7 +185,7 @@ def candidates_for(
             plan=plan,
             ir=ir,
             lowered=low,
-            estimate=low.time(topo, payload_elems),
+            estimate=_priced(ir, low, topo, payload_elems),
             base_algorithm=low.algorithm,
         )
 
@@ -245,7 +257,7 @@ def _pipeline_candidates(
                     plan=c.plan,
                     ir=rewritten,
                     lowered=low,
-                    estimate=low.time(topo, payload_elems),
+                    estimate=_priced(rewritten, low, topo, payload_elems),
                     pipeline=pl.name,
                     base_algorithm=c.base_algorithm,
                 )

@@ -62,7 +62,9 @@ from typing import Callable
 import numpy as np
 
 from repro.core.ir import (
+    INPUT_SLOT,
     CommRound,
+    LocalOp,
     ScheduleIR,
     ir_messages,
     merge_comm_rounds,
@@ -70,13 +72,59 @@ from repro.core.ir import (
     round_hazard_free,
 )
 
-from .model import Hierarchy, Topology, Torus2D, Torus3D, TwoLevel, schedule_time
+from .model import (
+    MAC_SECONDS,
+    Hierarchy,
+    Topology,
+    Torus2D,
+    Torus3D,
+    TwoLevel,
+    local_op_unit_work,
+    schedule_time,
+)
 
 
-def ir_time(ir: ScheduleIR, topo: Topology, payload_elems: int = 1) -> float:
-    """α-β price of an IR on a topology (seconds) — the objective every
-    price-guarded pass and the autotuner optimize."""
-    return schedule_time(topo, ir_messages(ir), payload_elems).total
+def ir_compute_time(ir: ScheduleIR, topo: Topology, payload_elems: int = 1) -> float:
+    """Seconds of local arithmetic on the IR's critical path, with the
+    overlap credit: an ``overlap=True`` LocalOp runs concurrently with the
+    NEXT comm round, so it only costs the part that does not hide under that
+    round's wire time (``max(comm, work) − comm``). Comm time itself is NOT
+    included — this is exactly the term :func:`ir_time` adds on top of
+    :func:`~repro.topo.model.schedule_time`."""
+    per_round = schedule_time(topo, ir_messages(ir), payload_elems).per_round
+    total = 0.0
+    pending = 0.0  # overlap-tagged work waiting for the next comm round
+    ri = 0
+    for step in ir.steps:
+        if isinstance(step, CommRound):
+            total += max(0.0, pending - per_round[ri])
+            pending = 0.0
+            ri += 1
+            continue
+        work = local_op_unit_work(step) * payload_elems * MAC_SECONDS
+        if step.overlap:
+            pending += work
+        else:
+            total += work
+    return total + pending  # trailing overlap op has nothing to hide under
+
+
+def ir_time(
+    ir: ScheduleIR,
+    topo: Topology,
+    payload_elems: int = 1,
+    *,
+    include_compute: bool = True,
+) -> float:
+    """α-β + compute price of an IR on a topology (seconds) — the objective
+    every price-guarded pass and the autotuner optimize. Comm is
+    :func:`~repro.topo.model.schedule_time` over the message maps; local
+    arithmetic adds :func:`ir_compute_time` (MAC-priced LocalOps, with
+    ``overlap=True`` ops credited against the round they hide under)."""
+    comm = schedule_time(topo, ir_messages(ir), payload_elems).total
+    if not include_compute:
+        return comm
+    return comm + ir_compute_time(ir, topo, payload_elems)
 
 
 # ---------------------------------------------------------------------------
@@ -434,6 +482,200 @@ def align_subgroups(
     return relabel(ir, best_perm)
 
 
+def _ir_slots(ir: ScheduleIR) -> set[int]:
+    slots = {INPUT_SLOT, ir.out_slot}
+    for step in ir.steps:
+        if isinstance(step, CommRound):
+            for t in step.transfers:
+                for ss, ds in t.slots:
+                    slots.add(ss)
+                    slots.add(ds)
+        else:
+            slots.update(step.out_slots)
+            slots.update(step.in_slots)
+    return slots
+
+
+def _observed_slots(steps, out_slot: int) -> set[int]:
+    """Slots whose current value is observed by ``steps``: comm sources,
+    add-mode destinations (the add reads what it lands on), LocalOp inputs,
+    and the IR's final output slot."""
+    obs = {out_slot}
+    for st in steps:
+        if isinstance(st, CommRound):
+            for t in st.transfers:
+                for ss, ds in t.slots:
+                    obs.add(ss)
+                    if t.mode == "add":
+                        obs.add(ds)
+        else:
+            obs.update(st.in_slots)
+    return obs
+
+
+def _pipeline_split(L: LocalOp, comms, read_after, alloc, K: int):
+    """Split one REPLACE-mode LocalOp followed by comm rounds ``comms`` into
+    the software-pipelined form, or return None when there is nothing to
+    defer. See :func:`pipeline_rounds` for the schedule produced."""
+    R = len(comms)
+    if R == 0 or not L.in_slots or not L.out_slots:
+        return None
+    reads = [{ss for t in c.transfers for ss, _ in t.slots} for c in comms]
+    stores = [
+        {ds for t in c.transfers if t.mode == "store" for _, ds in t.slots}
+        for c in comms
+    ]
+    stage = {}
+    for o in L.out_slots:
+        s = R + 1
+        for r in range(R):
+            if o in reads[r]:
+                s = r + 1
+                break
+        for r in range(s - 1):
+            if o in stores[r]:  # clobbered before first read: don't defer
+                s = 1
+                break
+        stage[o] = s
+    if all(s == 1 for s in stage.values()):
+        return None
+    row_of = {o: i for i, o in enumerate(L.out_slots)}
+    stage1 = tuple(o for o in L.out_slots if stage[o] == 1)
+    deferred = tuple(o for o in L.out_slots if stage[o] > 1)
+    sigma = {b: alloc() for b in L.in_slots}
+    tau = {o: alloc() for o in deferred}
+    n_in = len(L.in_slots)
+    # A: shadow-copy every input to σ and zero what the original REPLACE
+    # killed — deferred outputs (so in-flight adds land on zeros until the
+    # combine) plus every later-observed slot outside the out set (REPLACE
+    # semantics: those read as 0 after the original op). Coefficients are
+    # known (identity block + zero rows) even on structure-only IRs, so the
+    # α-β+compute model prices them as adds/free — not dense MACs.
+    zeroed = tuple(
+        dict.fromkeys(
+            deferred
+            + tuple(
+                s
+                for s in sorted(read_after)
+                if s not in L.out_slots and s not in sigma.values()
+            )
+        )
+    )
+    n_a = n_in + len(zeroed)
+    ca = np.zeros((K, n_a, n_in), dtype=np.uint64)
+    for j in range(n_in):
+        ca[:, j, j] = 1
+    steps = [
+        LocalOp(
+            out_slots=tuple(sigma[b] for b in L.in_slots) + zeroed,
+            in_slots=L.in_slots,
+            coeffs=ca,
+            update=True,
+        )
+    ]
+    sig = tuple(sigma[b] for b in L.in_slots)
+    if stage1:
+        c1 = L.coeffs[:, [row_of[o] for o in stage1], :] if L.coeffs is not None else None
+        steps.append(LocalOp(out_slots=stage1, in_slots=sig, coeffs=c1, update=True))
+    for r in range(R):
+        rows_r = tuple(o for o in deferred if stage[o] == r + 2)
+        if rows_r:
+            cp = (
+                L.coeffs[:, [row_of[o] for o in rows_r], :]
+                if L.coeffs is not None
+                else None
+            )
+            steps.append(
+                LocalOp(
+                    out_slots=tuple(tau[o] for o in rows_r),
+                    in_slots=sig,
+                    coeffs=cp,
+                    update=True,
+                    overlap=True,
+                )
+            )
+        steps.append(comms[r])
+        if rows_r:
+            fin = tuple(s for o in rows_r for s in (o, tau[o]))
+            cf = np.zeros((K, len(rows_r), 2 * len(rows_r)), dtype=np.uint64)
+            for i in range(len(rows_r)):
+                cf[:, i, 2 * i] = 1
+                cf[:, i, 2 * i + 1] = 1
+            steps.append(
+                LocalOp(out_slots=rows_r, in_slots=fin, coeffs=cf, update=True)
+            )
+    return steps
+
+
+def pipeline_rounds(ir: ScheduleIR, topo: Topology, payload_elems: int = 1) -> ScheduleIR:
+    """Software-pipeline a REPLACE-mode LocalOp across the comm rounds that
+    follow it, so each round's ppermute overlaps the contraction producing
+    the NEXT round's operands (the ROADMAP's comm/compute-overlap item).
+
+    For a prologue contraction L whose output slot ``o`` is first read in
+    comm round ``r`` (its *stage*), the heavy row for ``o`` need not run
+    before round 1 — deferring it past earlier ADD-mode deliveries is exact
+    because modular adds commute. The pass emits:
+
+    * ``A`` (update): shadow-copy L's inputs to fresh σ slots (the double
+      buffer) and zero the slots L's REPLACE would have killed, so in-flight
+      adds land on zeros;
+    * ``B`` (update): the stage-1 rows, computed from σ;
+    * per round r: ``P_r`` (update, **overlap**) computing stage-(r+1) rows
+      into fresh τ slots from σ — independent of round r, so the executor
+      issues it concurrently with the ppermute — then the untouched comm
+      round, then ``F_r`` (update) combining ``o ← o + τ(o)``.
+
+    Comm rounds are emitted byte-identical, so the ppermute budget is
+    preserved by construction. The pass is price-guarded against
+    :func:`ir_time` (which credits ``overlap=True`` work against the round
+    it hides under): the rewrite is kept only when strictly cheaper; the
+    shadow copies and combines are uniform-0/1 rows the model prices as
+    adds, while the deferred dense rows hide under the wire time."""
+    from dataclasses import replace as _replace
+
+    steps = list(ir.steps)
+    counter = [max(_ir_slots(ir)) + 1]
+
+    def alloc():
+        v = counter[0]
+        counter[0] += 1
+        return v
+
+    out_steps = []
+    changed = False
+    i = 0
+    while i < len(steps):
+        st = steps[i]
+        if not (isinstance(st, LocalOp) and not st.update):
+            out_steps.append(st)
+            i += 1
+            continue
+        j = i + 1
+        comms = []
+        while j < len(steps) and isinstance(steps[j], CommRound):
+            comms.append(steps[j])
+            j += 1
+        repl = _pipeline_split(
+            st, comms, _observed_slots(steps[i + 1 :], ir.out_slot), alloc, ir.K
+        )
+        if repl is None:
+            out_steps.append(st)
+            i += 1
+            continue
+        out_steps.extend(repl)
+        changed = True
+        i = j
+    if not changed:
+        return ir
+    cand = _replace(ir, steps=tuple(out_steps))
+    if ir_time(cand, topo, payload_elems) < ir_time(ir, topo, payload_elems) * (
+        1 - 1e-12
+    ):
+        return cand
+    return ir
+
+
 # ---------------------------------------------------------------------------
 # Pass / PassPipeline registry
 # ---------------------------------------------------------------------------
@@ -518,6 +760,24 @@ def _align_applies(ir, topo) -> bool:
     )
 
 
+def _pipeline_rounds_applies(ir, topo) -> bool:
+    # A REPLACE-mode LocalOp directly followed by a comm round that does NOT
+    # read all its outputs — i.e. at least one row is deferrable.
+    steps = ir.steps
+    for i, st in enumerate(steps[:-1]):
+        if not (
+            isinstance(st, LocalOp) and not st.update and st.in_slots and st.out_slots
+        ):
+            continue
+        nxt = steps[i + 1]
+        if not isinstance(nxt, CommRound):
+            continue
+        first_reads = {ss for t in nxt.transfers for ss, _ in t.slots}
+        if any(o not in first_reads for o in st.out_slots):
+            return True
+    return False
+
+
 PASSES: dict[str, Pass] = {
     p.name: p
     for p in [
@@ -545,6 +805,13 @@ PASSES: dict[str, Pass] = {
             _align_applies,
             doc="stride↔block transpose putting heavy subgroups on fast intra links",
         ),
+        Pass(
+            "pipeline-rounds",
+            pipeline_rounds,
+            _pipeline_rounds_applies,
+            doc="double-buffer a prologue contraction so each ppermute overlaps "
+            "the contraction feeding the next round",
+        ),
     ]
 }
 
@@ -559,6 +826,11 @@ PIPELINES: dict[str, PassPipeline] = {
             "split+fuse",
             (PASSES["split-contended"], PASSES["fuse-rounds"]),
             doc="stagger contended rounds, then re-pack what still fits",
+        ),
+        PassPipeline(
+            "pipeline",
+            (PASSES["pipeline-rounds"],),
+            doc="software-pipelined rounds: comm overlaps the next round's contraction",
         ),
     ]
 }

@@ -131,5 +131,13 @@ def test_public_topo_and_dist_api_is_documented():
         "fitted_costs_from_trace",
         "render_drift",
         "drift_rows",
+        # fused kernels + pipelined rounds (PR 8)
+        "pipeline_rounds",
+        "ir_compute_time",
+        "local_op_unit_work",
+        "MAC_SECONDS",
+        "KERNEL_MODES",
+        "gf_matmul",
+        "butterfly_mac",
     ]:
         assert name in all_docs, f"public symbol {name} not mentioned in docs"

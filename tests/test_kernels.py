@@ -111,3 +111,141 @@ def test_butterfly_mac_payload_dims():
     assert out.shape == (16, 3, 5, 7)
     ref = butterfly_mac_reference(jnp.asarray(parts), jnp.asarray(tw), jnp.asarray(tw_sh), q=q)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 8: block-size grids, padding pins, zero-size guards, interpret plumb
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 128, 8), (16, 128, 32), (64, 256, 64)])
+@pytest.mark.parametrize("M,K,N", [(8, 8, 128), (13, 21, 130), (40, 100, 257)])
+def test_gf_matmul_block_size_grid(bm, bn, bk, M, K, N):
+    """The wrapper is exact for every (block_m, block_n, block_k) choice,
+    including shapes that are NOT multiples of the blocks (the _pad_to /
+    _round_up path) — padding with zeros is absorbing mod q."""
+    q = M31
+    a = rand_u32((M, K), q, seed=bm + M)
+    b = rand_u32((K, N), q, seed=bn + N)
+    out = np.asarray(
+        gf_matmul(
+            jnp.asarray(a), jnp.asarray(b), q=q, block_m=bm, block_n=bn, block_k=bk
+        ),
+        dtype=np.uint64,
+    )
+    np.testing.assert_array_equal(out, gf_matmul_host(a, b, q))
+
+
+@pytest.mark.parametrize(
+    "M,K,N", [(0, 8, 8), (8, 0, 8), (8, 8, 0), (0, 0, 0)]
+)
+def test_gf_matmul_zero_size_guard(M, K, N):
+    """Empty operands (e.g. a slot emptied by fuse_trivial_rounds) must
+    short-circuit to an empty/zero result instead of padding up into the
+    kernel. K == 0 is a sum over zero terms: an all-zeros (M, N) result."""
+    q = M31
+    a = jnp.zeros((M, K), dtype=jnp.uint32)
+    b = jnp.zeros((K, N), dtype=jnp.uint32)
+    out = gf_matmul(a, b, q=q)
+    assert out.shape == (M, N) and out.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((M, N), np.uint32))
+
+
+def test_gf_matmul_batched_zero_size_guard():
+    q = M31
+    out = gf_matmul_batched(
+        jnp.zeros((3, 0, 7), dtype=jnp.uint32),
+        jnp.zeros((3, 7, 5), dtype=jnp.uint32),
+        q=q,
+    )
+    assert out.shape == (3, 0, 5)
+    out = gf_matmul_batched(
+        jnp.zeros((2, 4, 0), dtype=jnp.uint32),
+        jnp.zeros((2, 0, 5), dtype=jnp.uint32),
+        q=q,
+    )
+    assert out.shape == (2, 4, 5)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((2, 4, 5), np.uint32))
+
+
+def _pad_roundtrip_shapes():
+    # non-multiple shapes around each tiling boundary the wrappers pin
+    return [(1, 1), (7, 127), (8, 128), (9, 129), (17, 300)]
+
+
+@pytest.mark.parametrize("r,c", _pad_roundtrip_shapes())
+def test_pad_to_and_round_up_pins(r, c):
+    """_pad_to pads up to multiples with zeros, never truncates; _round_up
+    is the exact ceiling multiple (the kernels' 8×128 uint32 tile floor)."""
+    from repro.kernels.gf_matmul.ops import _pad_to, _round_up
+
+    x = jnp.arange(r * c, dtype=jnp.uint32).reshape(r, c)
+    p = _pad_to(x, 8, 128)
+    assert p.shape == (_round_up(r, 8), _round_up(c, 128))
+    assert p.shape[0] % 8 == 0 and p.shape[1] % 128 == 0
+    np.testing.assert_array_equal(np.asarray(p[:r, :c]), np.asarray(x))
+    assert int(np.asarray(p).sum()) == int(np.asarray(x, dtype=np.uint64).sum())
+    assert _round_up(r, 8) - r < 8 and _round_up(c, 128) - c < 128
+
+
+@pytest.mark.parametrize("B,P", [(1, 1), (7, 100), (8, 128), (9, 513)])
+def test_butterfly_mac_ragged_shapes(B, P):
+    """Non-multiple (B, P) — the wrapper's pad/slice path — stays exact for
+    every radix against the host field arithmetic."""
+    q = M31
+    for radix in (2, 3):
+        rng = np.random.default_rng(radix * 1000 + B + P)
+        parts = rng.integers(0, q, size=(radix, B, P), dtype=np.uint32)
+        tw = rng.integers(0, q, size=(B, radix), dtype=np.uint32)
+        tw_sh = np.asarray(shoup_precompute(tw, q))
+        out = butterfly_mac(jnp.asarray(parts), jnp.asarray(tw), jnp.asarray(tw_sh), q=q)
+        f = Field(q)
+        want = np.zeros((B, P), dtype=np.uint64)
+        for r in range(radix):
+            want = f.add(want, f.mul(parts[r], tw[:, r : r + 1]))
+        np.testing.assert_array_equal(np.asarray(out, dtype=np.uint64), want)
+
+
+def test_butterfly_mac_forwards_interpret_flag():
+    """Regression: butterfly_mac must pass interpret= through to the Pallas
+    kernel (it was silently dropped once — on a TPU-less host the explicit
+    interpret=True call is the only one that can run)."""
+    import inspect
+
+    from repro.kernels.butterfly import ops as bops
+
+    src = inspect.getsource(bops.butterfly_mac.__wrapped__)
+    assert "interpret=interpret" in src
+    q = NTT
+    rng = np.random.default_rng(9)
+    parts = rng.integers(0, q, size=(2, 8, 16), dtype=np.uint32)
+    tw = rng.integers(0, q, size=(8, 2), dtype=np.uint32)
+    tw_sh = np.asarray(shoup_precompute(tw, q))
+    out = butterfly_mac(
+        jnp.asarray(parts), jnp.asarray(tw), jnp.asarray(tw_sh), q=q, interpret=True
+    )
+    ref = butterfly_mac_reference(
+        jnp.asarray(parts), jnp.asarray(tw), jnp.asarray(tw_sh), q=q
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@given(
+    b=st.integers(1, 20),
+    p_=st.integers(1, 80),
+    radix=st.integers(2, 4),
+    seed=st.integers(0, 10000),
+)
+@settings(max_examples=10, deadline=None)
+def test_butterfly_mac_property(b, p_, radix, seed):
+    q = M31
+    rng = np.random.default_rng(seed)
+    parts = rng.integers(0, q, size=(radix, b, p_), dtype=np.uint32)
+    tw = rng.integers(0, q, size=(b, radix), dtype=np.uint32)
+    tw_sh = np.asarray(shoup_precompute(tw, q))
+    out = butterfly_mac(jnp.asarray(parts), jnp.asarray(tw), jnp.asarray(tw_sh), q=q)
+    f = Field(q)
+    want = np.zeros((b, p_), dtype=np.uint64)
+    for r in range(radix):
+        want = f.add(want, f.mul(parts[r], tw[:, r : r + 1]))
+    np.testing.assert_array_equal(np.asarray(out, dtype=np.uint64), want)

@@ -60,13 +60,15 @@ def test_resolve_profile_picks_hierarchical_from_mesh_topology():
     from repro.launch.profiles import resolve_profile
 
     prof = resolve_profile(multi_pod=True, calibration=False)
-    assert prof.algorithm == "multilevel"
+    # compute-aware pricing may pick the pipelined rewrite of the same
+    # family; the base algorithm and plan are the contract here
+    assert prof.algorithm.split("+")[0] == "multilevel"
     assert prof.levels == (4, 4, 2) == prof.plan.levels
     assert prof.topology.levels == production_topology(multi_pod=True).levels
     assert prof.tune.chosen.plan is prof.plan
 
     single = resolve_profile(multi_pod=False, calibration=False)
-    assert single.algorithm == "hierarchical"
+    assert single.algorithm.split("+")[0] == "hierarchical"
     assert single.levels == (4, 4)
 
 
@@ -85,7 +87,11 @@ def test_resolve_profile_from_live_mesh_shape():
     assert topology_for_mesh(mesh, axes).levels == (2, 2, 2)
     prof = resolve_profile(mesh=mesh, axes=axes, payload_bytes=65536,
                            calibration=False)
-    assert prof.algorithm == "multilevel" and prof.plan.levels == (2, 2, 2)
+    # at 64k payloads the compute-aware price makes the pipelined rewrite of
+    # the same schedule strictly cheaper, so accept an optional +<pipeline>
+    # suffix — the base family and the plan factorization are the contract
+    assert prof.algorithm.split("+")[0] == "multilevel"
+    assert prof.plan.levels == (2, 2, 2)
     with pytest.raises(ValueError):
         resolve_profile(mesh=mesh)  # axes required with mesh
 

@@ -1,0 +1,211 @@
+"""Serving harness: fixed-batch vs continuous-batching on one Poisson trace.
+
+The workload is a seeded ``repro.serve.traffic.poisson_trace`` (exponential
+arrivals, mixed prompt lengths, staggered generation budgets). Both engines
+serve the SAME trace:
+
+* fixed-batch baseline: requests are grouped into arrival-order batches of
+  ``n_slots``; a batch starts when its last member has arrived and every
+  result is delivered at batch completion (TTFT == E2E — the stall the
+  continuous engine removes). Throughput counts only each request's
+  requested tokens; the baseline's padding overshoot is wasted work.
+* continuous: ``repro.serve.ContinuousEngine`` with the same slot count —
+  bucketed compiled prefill + mid-decode slot refill.
+
+Emits ``bench.serve.*`` CSV rows (micro-timings routed into
+``bench.serve.prefill_us`` / ``bench.serve.decode_step_us`` histograms via
+``benchmarks.common.time_fn``) and writes ``results/BENCH_serve.json`` —
+schema-gated by ``tools/check_trace.py --kind serve``.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_serve [--smoke] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import smoke_config
+from repro.models import build_model
+from repro.serve import ContinuousEngine, Engine, LengthBand, Request, poisson_trace
+from repro.serve.engine import _percentiles_ms
+from repro.train.train_loop import make_decode_step, make_prefill_step
+
+from .common import emit, time_fn
+
+#: short-prompt-heavy mix sized for the smoke model's max_len
+MIX = (
+    LengthBand(2, 6, 0.5),
+    LengthBand(7, 14, 0.35),
+    LengthBand(15, 28, 0.15),
+)
+
+
+def _fixed_batch_serve(model, params, reqs, n_slots, max_len, eos_id=None):
+    """Measure the fixed-batch engine on the trace: arrival-order groups of
+    n_slots, batch starts once its last member arrived, per-request TTFT ==
+    E2E == batch completion − arrival."""
+    eng = Engine(model, params, max_len=max_len)
+    groups = [reqs[i : i + n_slots] for i in range(0, len(reqs), n_slots)]
+    # warmup: compile the decode step at batch size n_slots outside timing
+    warm = [reqs[0].prompt] * n_slots
+    eng.generate(warm, max_new_tokens=2, eos_id=eos_id)
+    ttfts, e2es = [], []
+    gen_total = 0
+    t0 = time.perf_counter()
+
+    def now():
+        return time.perf_counter() - t0
+
+    for g in groups:
+        start = max(r.arrival_s for r in g)
+        if start > now():
+            time.sleep(start - now())
+        prompts = [r.prompt for r in g]
+        # pad the trailing partial group so the compiled step's batch size
+        # (and so its compilation) is reused; padded rows are discarded
+        while len(prompts) < n_slots:
+            prompts.append(g[-1].prompt)
+        res = eng.generate(
+            prompts,
+            max_new_tokens=max(r.max_new_tokens for r in g),
+            eos_id=eos_id,
+        )
+        end = now()
+        gens = res.lengths - res.prompt_lens
+        for j, r in enumerate(g):
+            ttfts.append(end - r.arrival_s)
+            e2es.append(end - r.arrival_s)
+            # only the tokens the request asked for count as useful output
+            gen_total += int(min(gens[j], r.max_new_tokens))
+    wall_s = now()
+    return {
+        "tokens_per_s": (gen_total / wall_s) if wall_s > 0 else 0.0,
+        "ttft_ms": _percentiles_ms(ttfts),
+        "e2e_ms": _percentiles_ms(e2es),
+        "n_requests": len(reqs),
+        "wall_s": wall_s,
+    }
+
+
+def run(smoke: bool = True, out: str = os.path.join("results", "BENCH_serve.json")):
+    n_requests = 16 if smoke else 32
+    rate_rps = 60.0
+    n_slots = 4
+    max_new = 8
+    buckets = (8, 16, 32)
+    max_len = 48
+    seed = 0
+
+    cfg = smoke_config("qwen3-1.7b").replace(n_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    reqs = poisson_trace(
+        n_requests,
+        rate_rps,
+        mix=MIX,
+        max_new_tokens=max_new,
+        vocab_size=cfg.vocab_size,
+        seed=seed,
+    )
+
+    # continuous engine: compile every bucket + the decode tick on a warmup
+    # trace, then measure — recompiles stay bounded by the bucket set
+    ceng = ContinuousEngine(
+        model, params, n_slots=n_slots, max_len=max_len,
+        buckets=buckets, max_new_tokens=max_new,
+    )
+    warm = [
+        Request(id=f"warm-{b}", prompt=list(range(1, b + 1)), max_new_tokens=2)
+        for b in buckets
+        if b + 2 <= max_len
+    ]
+    ceng.serve(warm, greedy=True)
+    creport = ceng.serve(reqs, greedy=True, sync_every=4)
+
+    fixed = _fixed_batch_serve(model, params, reqs, n_slots, max_len)
+
+    # micro-timings of the two compiled graphs behind the engine
+    pf = jax.jit(make_prefill_step(model, into_cache=True))
+    dec = jax.jit(make_decode_step(model))
+    cache1 = model.init_cache(1, max_len)
+    tok_b = jnp.zeros((1, buckets[0]), jnp.int32)
+    us_pf = time_fn(
+        lambda: pf(params, cache1, tok_b, jnp.int32(0), jnp.int32(buckets[0]))[0],
+        metric="bench.serve.prefill_us",
+    )
+    cache_s = model.init_cache(n_slots, max_len)
+    toks = jnp.ones((n_slots, 1), jnp.int32)
+    pos = jnp.zeros((n_slots,), jnp.int32)
+    us_dec = time_fn(
+        lambda: dec(params, cache_s, toks, pos)[0],
+        metric="bench.serve.decode_step_us",
+    )
+
+    record = {
+        "model": cfg.name,
+        "n_layers": cfg.n_layers,
+        "workload": {
+            "n_requests": n_requests,
+            "rate_rps": rate_rps,
+            "max_new_tokens": max_new,
+            "seed": seed,
+            "mix": [[b.lo, b.hi, b.weight] for b in MIX],
+        },
+        "n_slots": n_slots,
+        "buckets": list(buckets),
+        "engines": {
+            "fixed_batch": fixed,
+            "continuous": creport.to_record(),
+        },
+        "speedup": {
+            "tokens_per_s": (
+                creport.tokens_per_s / fixed["tokens_per_s"]
+                if fixed["tokens_per_s"] > 0
+                else 0.0
+            ),
+            "ttft_p99": (
+                fixed["ttft_ms"]["p99"] / creport.ttft_ms["p99"]
+                if creport.ttft_ms["p99"] > 0
+                else 0.0
+            ),
+        },
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(out)), exist_ok=True)
+    with open(out, "w") as fh:
+        json.dump(record, fh, indent=2, sort_keys=True)
+
+    emit("serve_fixed_tokens_per_s", fixed["wall_s"] * 1e6,
+         f"tok/s={fixed['tokens_per_s']:.1f}")
+    emit("serve_continuous_tokens_per_s", creport.wall_s * 1e6,
+         f"tok/s={creport.tokens_per_s:.1f}")
+    emit("serve_prefill", us_pf, f"bucket={buckets[0]}")
+    emit("serve_decode_step", us_dec, f"slots={n_slots}")
+    emit(
+        "serve_speedup",
+        0.0,
+        f"tok/s x{record['speedup']['tokens_per_s']:.2f} "
+        f"ttft_p99 x{record['speedup']['ttft_p99']:.2f} "
+        f"compiles={creport.prefill_compiles}",
+    )
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true", help="small CI-sized run")
+    ap.add_argument("--out", default=os.path.join("results", "BENCH_serve.json"))
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

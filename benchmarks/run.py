@@ -26,6 +26,7 @@ def main(argv=None) -> None:
         bench_gradient_coding,# straggler mitigation application
         bench_dryrun_roofline,# deliverable (g) table
         bench_topology,       # repro.topo: flat vs hierarchical on 8 devices
+        bench_serve,          # continuous-batching vs fixed-batch serving
     )
 
     tracer = None
@@ -47,6 +48,7 @@ def main(argv=None) -> None:
         bench_gradient_coding,
         bench_dryrun_roofline,
         bench_topology,
+        bench_serve,
     ):
         name = mod.__name__.rsplit(".", 1)[-1]
         try:

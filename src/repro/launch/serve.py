@@ -1,4 +1,9 @@
-"""Production serving launcher: mesh-placed params + batched engine.
+"""Production serving launcher: mesh-placed params + serving engine.
+
+Continuous batching by default (compiled bucketed prefill + slot
+scheduler); ``--engine fixed`` falls back to the fixed-batch loop (also
+the automatic fallback for model kinds without one-pass prefill:
+recurrent, encoder-decoder, VLM).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
         --prompts "1,2,3;4,5" --max-new 16
@@ -16,7 +21,7 @@ from repro.configs.base import ShapeSpec
 from repro.launch.mesh import make_mesh
 from repro.launch.profiles import BASELINE, rules_for
 from repro.models import build_model
-from repro.serve import Engine
+from repro.serve import ContinuousEngine, Engine, Request
 from repro.train import latest_step, param_shardings, restore_checkpoint
 
 
@@ -29,6 +34,8 @@ def main():
     ap.add_argument("--prompts", default="1,2,3;7,8")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--engine", choices=["continuous", "fixed"], default="continuous")
+    ap.add_argument("--slots", type=int, default=4)
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get(args.arch)
@@ -43,14 +50,36 @@ def main():
         like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
         params, _ = restore_checkpoint(args.ckpt, like, shardings=ps)
 
-    eng = Engine(model, params, max_len=args.max_len, mesh=mesh, rules=rules)
     prompts = [[int(t) for t in p.split(",") if t] for p in args.prompts.split(";")]
-    t0 = time.time()
-    res = eng.generate(prompts, max_new_tokens=args.max_new)
-    dt = time.time() - t0
-    print(f"{res.steps} decode steps, {len(prompts)} seqs, {dt:.2f}s")
-    for i, row in enumerate(res.tokens):
-        print(f"seq {i}: {row.tolist()}")
+    use_continuous = args.engine == "continuous" and model.supports_prefill
+    if args.engine == "continuous" and not use_continuous:
+        print(f"{cfg.name}: no one-pass prefill; falling back to fixed-batch")
+
+    if use_continuous:
+        eng = ContinuousEngine(
+            model, params, n_slots=args.slots, max_len=args.max_len,
+            max_new_tokens=args.max_new, mesh=mesh, rules=rules,
+        )
+        reqs = [
+            Request(id=f"cli-{i}", prompt=p, max_new_tokens=args.max_new)
+            for i, p in enumerate(prompts)
+        ]
+        rep = eng.serve(reqs)
+        print(
+            f"{rep.decode_steps} decode steps, {len(rep.results)} reqs, "
+            f"{rep.tokens_per_s:.1f} tok/s, ttft p99 {rep.ttft_ms['p99']:.1f} ms, "
+            f"{rep.prefill_compiles} prefill graphs"
+        )
+        for r in rep.results:
+            print(f"{r.id}: {r.tokens}")
+    else:
+        eng = Engine(model, params, max_len=args.max_len, mesh=mesh, rules=rules)
+        t0 = time.time()
+        res = eng.generate(prompts, max_new_tokens=args.max_new)
+        dt = time.time() - t0
+        print(f"{res.steps} decode steps, {len(prompts)} seqs, {dt:.2f}s")
+        for i, row in enumerate(res.tokens):
+            print(f"seq {i}: {row[: res.lengths[i]].tolist()}")
 
 
 if __name__ == "__main__":

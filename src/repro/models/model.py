@@ -14,6 +14,9 @@ Public surface (used by train/, serve/, launch/):
     model.init_cache(batch) / model.cache_specs(batch)
     model.prefill(params, batch, ctx)          → (logits, cache)
     model.decode_step(params, cache, tokens, pos, ctx) → (logits, cache)
+    model.prefill_into_cache(params, cache, tokens, slot, ctx)
+                            → (logits, cache)   # one-pass KV fill of a slot
+    model.supports_prefill  → bool              # False for recurrent/enc-dec
 """
 
 from __future__ import annotations
@@ -72,6 +75,16 @@ def _dense_decode(params, x, cfg, cache, pos, ctx):
     x = x + h
     x = x + L.swiglu(params["mlp"], L.rmsnorm(params["ln2"], x), ctx)
     return x, cache2
+
+
+def _dense_prefill(params, x, cfg, ctx, aux):
+    """Full-sequence forward that also returns this layer's cache content
+    (the K/V rows for positions [0, S)) — the decode path's cache is filled
+    in ONE pass instead of a per-token refeed."""
+    h, (k, v) = L.attention_fwd(params["attn"], L.rmsnorm(params["ln1"], x), cfg, ctx)
+    x = x + h
+    x = x + L.swiglu(params["mlp"], L.rmsnorm(params["ln2"], x), ctx)
+    return x, aux, {"k": k, "v": v}
 
 
 def _kv_cache_init(cfg, batch, s_max, dtype):
@@ -137,6 +150,16 @@ def _moe_decode(params, x, cfg, cache, pos, ctx):
     return x + mo, cache2
 
 
+def _moe_prefill(params, x, cfg, ctx, aux):
+    h, (k, v) = L.attention_fwd(params["attn"], L.rmsnorm(params["ln1"], x), cfg, ctx)
+    x = x + h
+    xn = L.rmsnorm(params["ln2"], x)
+    mo, a = L.moe_block(params["moe"], xn, cfg, ctx)
+    if cfg.moe.dense_residual_ff:
+        mo = mo + L.swiglu(params["dense_mlp"], xn, ctx)
+    return x + mo, aux + a, {"k": k, "v": v}
+
+
 def _mla_block_init(moe: bool):
     def init(key, cfg, dtype):
         k1, k2 = jax.random.split(key)
@@ -196,6 +219,22 @@ def _mla_decode(moe: bool):
         return x + L.swiglu(params["mlp"], xn, ctx), cache2
 
     return dec
+
+
+def _mla_prefill(moe: bool):
+    def pf(params, x, cfg, ctx, aux):
+        h, (c_kv, k_rope) = MLA.mla_fwd(
+            params["attn"], L.rmsnorm(params["ln1"], x), cfg, ctx
+        )
+        x = x + h
+        xn = L.rmsnorm(params["ln2"], x)
+        content = {"c_kv": c_kv, "k_rope": k_rope}
+        if moe:
+            mo, a = L.moe_block(params["moe"], xn, cfg, ctx)
+            return x + mo, aux + a, content
+        return x + L.swiglu(params["mlp"], xn, ctx), aux, content
+
+    return pf
 
 
 def _mamba_block_init(moe: bool):
@@ -293,13 +332,15 @@ def _rwkv_decode(params, x, cfg, cache, pos, ctx):
 
 
 _KINDS: dict[str, dict[str, Any]] = {
-    "dense": dict(init=_dense_init, specs=_dense_specs, fwd=_dense_fwd, decode=_dense_decode, cache="kv"),
-    "moe": dict(init=_moe_init, specs=_moe_specs, fwd=_moe_fwd, decode=_moe_decode, cache="kv"),
-    "mla_dense": dict(init=_mla_block_init(False), specs=_mla_block_specs(False), fwd=_mla_fwd(False), decode=_mla_decode(False), cache="mla"),
-    "mla_moe": dict(init=_mla_block_init(True), specs=_mla_block_specs(True), fwd=_mla_fwd(True), decode=_mla_decode(True), cache="mla"),
-    "mamba": dict(init=_mamba_block_init(False), specs=_mamba_block_specs(False), fwd=_mamba_fwd(False), decode=_mamba_decode(False), cache="mamba"),
-    "mamba_moe": dict(init=_mamba_block_init(True), specs=_mamba_block_specs(True), fwd=_mamba_fwd(True), decode=_mamba_decode(True), cache="mamba"),
-    "rwkv": dict(init=_rwkv_init, specs=_rwkv_specs, fwd=_rwkv_fwd, decode=_rwkv_decode, cache="rwkv"),
+    "dense": dict(init=_dense_init, specs=_dense_specs, fwd=_dense_fwd, decode=_dense_decode, cache="kv", prefill=_dense_prefill),
+    "moe": dict(init=_moe_init, specs=_moe_specs, fwd=_moe_fwd, decode=_moe_decode, cache="kv", prefill=_moe_prefill),
+    "mla_dense": dict(init=_mla_block_init(False), specs=_mla_block_specs(False), fwd=_mla_fwd(False), decode=_mla_decode(False), cache="mla", prefill=_mla_prefill(False)),
+    "mla_moe": dict(init=_mla_block_init(True), specs=_mla_block_specs(True), fwd=_mla_fwd(True), decode=_mla_decode(True), cache="mla", prefill=_mla_prefill(True)),
+    # recurrent states have no per-position cache rows a one-pass prefill
+    # could write; engines fall back to the per-token refeed for these
+    "mamba": dict(init=_mamba_block_init(False), specs=_mamba_block_specs(False), fwd=_mamba_fwd(False), decode=_mamba_decode(False), cache="mamba", prefill=None),
+    "mamba_moe": dict(init=_mamba_block_init(True), specs=_mamba_block_specs(True), fwd=_mamba_fwd(True), decode=_mamba_decode(True), cache="mamba", prefill=None),
+    "rwkv": dict(init=_rwkv_init, specs=_rwkv_specs, fwd=_rwkv_fwd, decode=_rwkv_decode, cache="rwkv", prefill=None),
 }
 
 
@@ -344,6 +385,17 @@ def _cache_init_for(kind: str, cfg, batch, s_max, dtype):
     if c == "rwkv":
         return SSM.rwkv6_state_init(cfg, batch, dtype)
     raise KeyError(c)
+
+
+def _write_slot(cache_tree, content_tree, slot):
+    """Write per-layer prefill content (1, L, ...) into row ``slot`` of the
+    batched cache leaves (B, Smax, ...) — ``slot`` may be a traced scalar."""
+
+    def write(leaf, content):
+        starts = (slot,) + (0,) * (leaf.ndim - 1)
+        return jax.lax.dynamic_update_slice(leaf, content.astype(leaf.dtype), starts)
+
+    return jax.tree.map(write, cache_tree, content_tree)
 
 
 def _cache_dims_for(kind: str):
@@ -699,6 +751,59 @@ class Model:
         """Run the full prompt, returning logits; cache building for decode is
         exercised separately (decode_step), matching the dry-run contract."""
         return self.forward(params, batch, ctx)
+
+    @property
+    def supports_prefill(self) -> bool:
+        """True iff every layer kind can emit its cache rows from one
+        full-sequence pass (attention K/V and MLA latents can; recurrent
+        mamba/rwkv states and the enc-dec/VLM frontends cannot)."""
+        if self.is_encdec or self.is_vlm:
+            return False
+        return all(
+            _KINDS[k].get("prefill") is not None for k in (*self.prefix, *self.body)
+        )
+
+    def prefill_into_cache(self, params, cache, tokens, slot, ctx=L.NO_CTX):
+        """One-pass prompt prefill into a decode-slot cache row.
+
+        ``tokens``: (1, L) int32, the prompt right-padded to a length bucket
+        L ≤ Smax. Runs the full-sequence trunk once, writing every layer's
+        cache content for positions [0, L) into row ``slot`` of the batched
+        decode ``cache``, and returns ``(logits (1, L, V_padded), cache)``.
+        Rows of the padded tail carry garbage K/V, which the decode path
+        never attends (its mask is ``t <= pos`` and the per-token decode
+        overwrites position p before attending it).
+        """
+        if not self.supports_prefill:
+            raise NotImplementedError(
+                f"{self.cfg.name}: one-pass prefill needs per-position cache "
+                "rows in every layer (recurrent/enc-dec/VLM models refeed)"
+            )
+        cfg = self.cfg
+        cache = dict(cache)
+        x = self._embed(params, tokens).astype(self.dtype)
+        x = ctx.cons(x, ("batch", "seq", "d_model"))
+        aux = jnp.zeros((), jnp.float32)
+        for i, kind in enumerate(self.prefix):
+            x, aux, content = _KINDS[kind]["prefill"](
+                params[f"prefix_{i}"], x, cfg, ctx, aux
+            )
+            cache[f"prefix_{i}"] = _write_slot(cache[f"prefix_{i}"], content, slot)
+        pf_fns = [_KINDS[k]["prefill"] for k in self.body]
+
+        def step(carry, xs):
+            x, aux = carry
+            blk, bcache = xs
+            new_bcache = {}
+            for j, fn in enumerate(pf_fns):
+                x, aux, content = fn(blk[f"b{j}"], x, cfg, ctx, aux)
+                new_bcache[f"b{j}"] = _write_slot(bcache[f"b{j}"], content, slot)
+            return (x, aux), new_bcache
+
+        (x, _), new_body = jax.lax.scan(step, (x, aux), (params["body"], cache["body"]))
+        cache["body"] = new_body
+        logits = self._head(params, L.rmsnorm(params["ln_f"], x))
+        return logits, cache
 
 
 def _xent(logits, labels, mask):

@@ -13,8 +13,15 @@ repo:
   labelled by the round's topology level (the rows ``repro.obs.feed``
   refits α/β from);
 * ``serve.step_us`` / ``serve.tokens_per_s`` / ``serve.eos_syncs_saved`` —
-  the serving engine's decode-step latency histogram, throughput gauge,
-  and the device→host syncs avoided by batched EOS checking;
+  the fixed-batch serving engine's decode-step latency histogram, its
+  generated-tokens-only throughput gauge (shared with the continuous
+  engine), and the device→host syncs avoided by batched EOS checking;
+* ``serve.prefill_compiles`` / ``serve.decode_steps`` / ``serve.ttft_ms``
+  / ``serve.e2e_ms`` / ``serve.slot_occupancy`` — the continuous-batching
+  engine: compiled-prefill-graph count (bounded by the length-bucket
+  set), decode ticks, per-request time-to-first-token and end-to-end
+  latency histograms, and the mean occupied-slot fraction; with
+  ``tracer=`` also ``serve.prefill_us`` / ``serve.decode_chunk_us``;
 * ``bench.*_us`` — benchmark sample histograms routed through
   ``benchmarks.common.time_fn(metric=...)``.
 

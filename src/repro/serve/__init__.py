@@ -1,1 +1,14 @@
-from .engine import Engine, GenerationResult  # noqa: F401
+from .engine import (  # noqa: F401
+    ContinuousEngine,
+    Engine,
+    GenerationResult,
+    ServeReport,
+)
+from .scheduler import (  # noqa: F401
+    DEFAULT_BUCKETS,
+    Request,
+    RequestResult,
+    SlotScheduler,
+    bucket_for,
+)
+from .traffic import DEFAULT_MIX, LengthBand, poisson_trace  # noqa: F401

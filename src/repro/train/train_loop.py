@@ -71,8 +71,31 @@ def make_decode_step(model, mesh=None, rules=None):
     return decode_step
 
 
-def make_prefill_step(model, mesh=None, rules=None):
+def make_prefill_step(model, mesh=None, rules=None, into_cache: bool = False):
+    """Prefill step factory.
+
+    ``into_cache=False`` (legacy, dry-run contract): ``(params, batch) →
+    logits`` — full forward over the prompt, no cache.
+
+    ``into_cache=True`` (serving contract): ``(params, cache, tokens (1, L),
+    slot, plen) → (last_logits (1, V_padded), cache)`` — ONE forward pass
+    writes the prompt's per-layer K/V into row ``slot`` of the batched
+    decode cache and returns the logits of position ``plen - 1``, i.e. the
+    first generated token's distribution. This replaces the per-token
+    prompt refeed: jit it once per length bucket L and the prompt costs one
+    graph launch instead of ``plen`` decode steps.
+    """
     ctx = make_ctx(mesh, rules)
+
+    if into_cache:
+
+        def prefill_cache(params, cache, tokens, slot, plen):
+            logits, cache = model.prefill_into_cache(params, cache, tokens, slot, ctx)
+            idx = jnp.reshape(jnp.maximum(plen - 1, 0), (1, 1, 1))
+            last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
+            return last, cache
+
+        return prefill_cache
 
     def prefill(params, batch):
         logits, aux, _ = model.forward(params, batch, ctx)

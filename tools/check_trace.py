@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """Schema-check observability artifacts (CI gate for the telemetry layer).
 
-Two kinds, auto-detected from content (or forced with ``--kind``):
+Three kinds, auto-detected from content (or forced with ``--kind``):
 
 * ``trace`` — a Chrome Trace Event file emitted by
   ``repro.obs.export.write_chrome_trace`` (or the JSONL span sink):
@@ -17,6 +17,13 @@ Two kinds, auto-detected from content (or forced with ``--kind``):
   whose ``fitted_level_costs`` rows must stay loader-compatible
   (``{level, alpha_s, beta_s_per_elem}`` —
   ``topo.calibrate.load_fitted_costs``'s contract).
+* ``serve`` — ``results/BENCH_serve.json`` from ``benchmarks/
+  bench_serve.py``: fixed-batch vs continuous engine rows on one seeded
+  Poisson trace. Beyond the structural schema it enforces the semantic
+  invariants the harness guarantees: ``p50 ≤ p99`` in every latency
+  block, ``slot_occupancy ∈ [0, 1]``, and the continuous engine's
+  prefill compile count bounded by the bucket set
+  (``prefill_compiles ≤ len(buckets)``).
 
 The validator is a small hand-rolled structural checker (dependency-free on
 purpose — ``jsonschema`` is not one of the project's declared deps), with a
@@ -159,6 +166,94 @@ BENCH_SCHEMA = {
 }
 
 
+_LATENCY_BLOCK = {
+    "type": "object",
+    "required": ["p50", "p99"],
+    "properties": {
+        "p50": {"type": "number", "minimum": 0},
+        "p99": {"type": "number", "minimum": 0},
+    },
+}
+
+_ENGINE_ROW = {
+    "type": "object",
+    "required": ["tokens_per_s", "ttft_ms", "e2e_ms", "n_requests", "wall_s"],
+    "properties": {
+        "tokens_per_s": {"type": "number", "minimum": 0},
+        "ttft_ms": _LATENCY_BLOCK,
+        "e2e_ms": _LATENCY_BLOCK,
+        "n_requests": {"type": "integer", "minimum": 1},
+        "wall_s": {"type": "number", "minimum": 0},
+    },
+}
+
+_CONTINUOUS_ROW = {
+    "type": "object",
+    "required": _ENGINE_ROW["required"]
+    + ["slot_occupancy", "prefill_compiles", "decode_steps"],
+    "properties": {
+        **_ENGINE_ROW["properties"],
+        "slot_occupancy": {"type": "number", "minimum": 0},
+        "prefill_compiles": {"type": "integer", "minimum": 0},
+        "decode_steps": {"type": "integer", "minimum": 0},
+    },
+}
+
+SERVE_SCHEMA = {
+    "type": "object",
+    "required": ["workload", "n_slots", "buckets", "engines"],
+    "properties": {
+        "n_slots": {"type": "integer", "minimum": 1},
+        "buckets": {"type": "array", "items": {"type": "integer", "minimum": 1}},
+        "workload": {
+            "type": "object",
+            "required": ["n_requests", "rate_rps", "seed"],
+            "properties": {
+                "n_requests": {"type": "integer", "minimum": 1},
+                "rate_rps": {"type": "number", "minimum": 0},
+                "seed": {"type": "integer", "minimum": 0},
+            },
+        },
+        "engines": {
+            "type": "object",
+            "required": ["fixed_batch", "continuous"],
+            "properties": {
+                "fixed_batch": _ENGINE_ROW,
+                "continuous": _CONTINUOUS_ROW,
+            },
+        },
+    },
+}
+
+
+def check_serve(record: dict) -> list[str]:
+    """SERVE_SCHEMA + the harness's semantic invariants: ordered latency
+    percentiles, occupancy a fraction, compile count bounded by buckets."""
+    errs = validate(record, SERVE_SCHEMA)
+    if errs:
+        return errs
+    for ename, row in record["engines"].items():
+        for blk in ("ttft_ms", "e2e_ms"):
+            if row[blk]["p50"] > row[blk]["p99"]:
+                errs.append(
+                    f"$.engines.{ename}.{blk}: p50 {row[blk]['p50']} > "
+                    f"p99 {row[blk]['p99']}"
+                )
+    cont = record["engines"]["continuous"]
+    if not (0.0 <= cont["slot_occupancy"] <= 1.0):
+        errs.append(
+            f"$.engines.continuous.slot_occupancy: "
+            f"{cont['slot_occupancy']} outside [0, 1]"
+        )
+    if cont["prefill_compiles"] > len(record["buckets"]):
+        errs.append(
+            f"$.engines.continuous.prefill_compiles: "
+            f"{cont['prefill_compiles']} > {len(record['buckets'])} buckets "
+            "(length bucketing failed to bound recompiles)"
+        )
+    return errs
+
+
 def check_trace(record: dict) -> list[str]:
     """TRACE_SCHEMA + the semantic invariants the exporter guarantees:
     start-time-sorted events and predicted_us on every comm-round span."""
@@ -215,7 +310,9 @@ def _jsonl_to_trace(lines: list[dict]) -> dict:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("path")
-    ap.add_argument("--kind", choices=["trace", "bench", "auto"], default="auto")
+    ap.add_argument(
+        "--kind", choices=["trace", "bench", "serve", "auto"], default="auto"
+    )
     args = ap.parse_args(argv)
     with open(args.path) as fh:
         text = fh.read()
@@ -228,16 +325,28 @@ def main(argv=None) -> int:
         record = json.loads(text)
         kind = args.kind
         if kind == "auto":
-            kind = "trace" if "traceEvents" in record else "bench"
-    errs = check_trace(record) if kind == "trace" else check_bench(record)
+            if "traceEvents" in record:
+                kind = "trace"
+            elif "engines" in record:
+                kind = "serve"
+            else:
+                kind = "bench"
+    checker = {"trace": check_trace, "bench": check_bench, "serve": check_serve}
+    errs = checker[kind](record)
     if errs:
         for e in errs:
             print(f"FAIL {e}", file=sys.stderr)
         return 1
-    n = len(record.get("traceEvents", [])) if kind == "trace" else len(
-        record.get("calibration", {}).get("samples", [])
-    )
-    print(f"OK {args.path}: valid {kind} ({n} {'events' if kind == 'trace' else 'calibration samples'})")
+    if kind == "trace":
+        detail = f"{len(record.get('traceEvents', []))} events"
+    elif kind == "serve":
+        detail = f"{record['workload']['n_requests']} requests"
+    else:
+        detail = (
+            f"{len(record.get('calibration', {}).get('samples', []))} "
+            "calibration samples"
+        )
+    print(f"OK {args.path}: valid {kind} ({detail})")
     return 0
 
 

@@ -1,0 +1,184 @@
+"""Coded straggler-tolerant serving: overhead + recovery latency.
+
+One seeded Poisson trace served three ways by the continuous engine:
+
+* **uncoded** — the PR-9 baseline, no guard;
+* **coded, no faults** — ``serve.coded.CodedServeGuard`` LCC-encodes the
+  decode-path state to N = K + R simulated hosts before every decode
+  chunk: the pure snapshot/encode overhead (tokens/s, p99 TTFT);
+* **fault scenarios** — the same coded run with 1 and 2 scheduled host
+  kills mid-trace: every in-flight request recovered from K surviving
+  shards, the token streams re-checked bit-identical against the
+  unfailed baseline, recovery latency (``serve.recovery_us``) reported.
+
+Writes ``results/BENCH_coded_serve.json`` — schema- and semantics-gated
+by ``tools/check_trace.py --kind coded-serve`` (recoveries ≥ injected
+faults, ordered recovery percentiles, ``tokens_identical`` true).
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_coded_serve [--smoke] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+from repro.configs import smoke_config
+from repro.models import build_model
+from repro.serve import (
+    CodedServeGuard,
+    ContinuousEngine,
+    FaultInjector,
+    LengthBand,
+    Request,
+    poisson_trace,
+)
+
+from .common import emit
+
+#: short-prompt-heavy mix sized for the smoke model's max_len
+MIX = (
+    LengthBand(2, 6, 0.5),
+    LengthBand(7, 14, 0.35),
+    LengthBand(15, 28, 0.15),
+)
+
+K, R = 3, 2  # N = 5 simulated hosts, any 3 survive
+
+
+def _tokens(report) -> dict:
+    return {r.id: tuple(r.tokens) for r in report.results}
+
+
+def run(
+    smoke: bool = True,
+    out: str = os.path.join("results", "BENCH_coded_serve.json"),
+):
+    n_requests = 12 if smoke else 24
+    rate_rps = 60.0
+    n_slots = 4
+    max_new = 8
+    buckets = (8, 16, 32)
+    max_len = 48
+    seed = 0
+    sync_every = 2
+
+    cfg = smoke_config("qwen3-1.7b").replace(n_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    def trace():
+        return poisson_trace(
+            n_requests,
+            rate_rps,
+            mix=MIX,
+            max_new_tokens=max_new,
+            vocab_size=cfg.vocab_size,
+            seed=seed,
+        )
+
+    eng = ContinuousEngine(
+        model, params, n_slots=n_slots, max_len=max_len,
+        buckets=buckets, max_new_tokens=max_new,
+    )
+    warm = [
+        Request(id=f"warm-{b}", prompt=list(range(1, b + 1)), max_new_tokens=2)
+        for b in buckets
+        if b + 2 <= max_len
+    ]
+    eng.serve(warm, greedy=True)
+
+    # unfailed runs: the uncoded baseline and the pure coding overhead
+    base = eng.serve(trace(), greedy=True, sync_every=sync_every)
+    base_toks = _tokens(base)
+    coded_clean = eng.serve(
+        trace(), greedy=True, sync_every=sync_every,
+        guard=CodedServeGuard(K=K, R=R),
+    )
+    assert _tokens(coded_clean) == base_toks  # guard must be a no-op on tokens
+
+    # fault scenarios: 1 and 2 host kills mid-trace; tokens must still
+    # match the unfailed baseline bit-for-bit
+    scenarios = []
+    for kills in ((3, 0),), ((3, 0), (7, 4)):
+        guard = CodedServeGuard(K=K, R=R, injector=FaultInjector(kills=kills))
+        rep = eng.serve(
+            trace(), greedy=True, sync_every=sync_every, guard=guard
+        )
+        scenarios.append(
+            {
+                "kills": len(kills),
+                "kill_schedule": [list(k) for k in kills],
+                "tokens_identical": _tokens(rep) == base_toks,
+                "tokens_per_s": rep.tokens_per_s,
+                "coded": rep.coded,
+            }
+        )
+
+    record = {
+        "model": cfg.name,
+        "n_layers": cfg.n_layers,
+        "workload": {
+            "n_requests": n_requests,
+            "rate_rps": rate_rps,
+            "max_new_tokens": max_new,
+            "seed": seed,
+            "mix": [[b.lo, b.hi, b.weight] for b in MIX],
+        },
+        "n_slots": n_slots,
+        "buckets": list(buckets),
+        "sync_every": sync_every,
+        "coded": {"K": K, "R": R, "n_hosts": K + R},
+        "engines": {
+            "uncoded": base.to_record(),
+            "coded": coded_clean.to_record(),
+        },
+        "fault_scenarios": scenarios,
+        "overhead": {
+            "tokens_per_s_ratio": (
+                coded_clean.tokens_per_s / base.tokens_per_s
+                if base.tokens_per_s > 0
+                else 0.0
+            ),
+            "ttft_p99_ratio": (
+                coded_clean.ttft_ms["p99"] / base.ttft_ms["p99"]
+                if base.ttft_ms["p99"] > 0
+                else 0.0
+            ),
+        },
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(out)), exist_ok=True)
+    with open(out, "w") as fh:
+        json.dump(record, fh, indent=2, sort_keys=True)
+
+    emit("coded_serve_uncoded_tokens_per_s", base.wall_s * 1e6,
+         f"tok/s={base.tokens_per_s:.1f}")
+    emit("coded_serve_coded_tokens_per_s", coded_clean.wall_s * 1e6,
+         f"tok/s={coded_clean.tokens_per_s:.1f} "
+         f"x{record['overhead']['tokens_per_s_ratio']:.2f}")
+    for sc in scenarios:
+        c = sc["coded"]
+        emit(
+            f"coded_serve_recovery_{sc['kills']}kill",
+            c["recovery_us"]["p99"],
+            f"recoveries={c['recoveries']} identical={sc['tokens_identical']}",
+        )
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true", help="small CI-sized run")
+    ap.add_argument(
+        "--out", default=os.path.join("results", "BENCH_coded_serve.json")
+    )
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

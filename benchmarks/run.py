@@ -27,6 +27,7 @@ def main(argv=None) -> None:
         bench_dryrun_roofline,# deliverable (g) table
         bench_topology,       # repro.topo: flat vs hierarchical on 8 devices
         bench_serve,          # continuous-batching vs fixed-batch serving
+        bench_coded_serve,    # LCC fault-tolerant serving overhead + recovery
     )
 
     tracer = None
@@ -49,6 +50,7 @@ def main(argv=None) -> None:
         bench_dryrun_roofline,
         bench_topology,
         bench_serve,
+        bench_coded_serve,
     ):
         name = mod.__name__.rsplit(".", 1)[-1]
         try:

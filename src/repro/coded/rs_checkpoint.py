@@ -60,6 +60,8 @@ def state_to_limbs(state) -> tuple[jnp.ndarray, LimbMeta]:
         arr = jnp.asarray(leaf)
         shapes.append(arr.shape)
         dtypes.append(arr.dtype)
+        if arr.dtype == jnp.bool_:  # bitcast can't take bool directly
+            arr = arr.astype(jnp.uint8)
         u8 = jax.lax.bitcast_convert_type(
             arr.reshape(-1), jnp.uint8
         ).reshape(-1)
@@ -83,8 +85,11 @@ def limbs_to_state(limbs: jnp.ndarray, meta: LimbMeta):
         ).reshape(-1).astype(jnp.uint8)
         nbytes = int(np.prod(shape, dtype=np.int64)) * jnp.dtype(dtype).itemsize
         u8 = u8[:nbytes]
-        itemsize = jnp.dtype(dtype).itemsize
-        arr = jax.lax.bitcast_convert_type(u8.reshape(-1, itemsize), dtype).reshape(shape)
+        if jnp.dtype(dtype) == jnp.bool_:
+            arr = u8.astype(jnp.bool_).reshape(shape)
+        else:
+            itemsize = jnp.dtype(dtype).itemsize
+            arr = jax.lax.bitcast_convert_type(u8.reshape(-1, itemsize), dtype).reshape(shape)
         out.append(arr)
     return jax.tree.unflatten(meta.treedef, out)
 

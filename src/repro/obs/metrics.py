@@ -22,6 +22,11 @@ repo:
   set), decode ticks, per-request time-to-first-token and end-to-end
   latency histograms, and the mean occupied-slot fraction; with
   ``tracer=`` also ``serve.prefill_us`` / ``serve.decode_chunk_us``;
+* ``serve.snapshots`` / ``serve.recoveries`` / ``serve.recovery_us`` —
+  coded straggler-tolerant serving (``serve.coded.CodedServeGuard``):
+  LCC snapshots of the decode-path state taken per chunk, hosts
+  recovered from after injected/real faults, and the any-K-of-N
+  Lagrange reconstruction latency histogram;
 * ``bench.*_us`` — benchmark sample histograms routed through
   ``benchmarks.common.time_fn(metric=...)``.
 

@@ -1,3 +1,9 @@
+from .coded import (  # noqa: F401
+    CodedDecodeGroup,
+    CodedServeGuard,
+    FaultInjector,
+    ProcessHostPool,
+)
 from .engine import (  # noqa: F401
     ContinuousEngine,
     Engine,

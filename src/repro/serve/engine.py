@@ -37,6 +37,7 @@ latency histograms (forces a device sync per span — opt-in).
 from __future__ import annotations
 
 import time
+import zlib
 from dataclasses import dataclass
 
 import numpy as np
@@ -54,6 +55,14 @@ from .scheduler import (
     SlotScheduler,
     bucket_for,
 )
+
+
+def _request_seed(req: Request) -> int:
+    """The request's sampling-stream seed: explicit ``req.seed`` or a
+    stable hash of its id — never a function of batch composition."""
+    if req.seed is not None:
+        return int(req.seed)
+    return zlib.crc32(req.id.encode()) & 0x7FFFFFFF
 
 
 def _percentiles_ms(samples_s: list[float]) -> dict:
@@ -201,10 +210,21 @@ class ServeReport:
     slot_occupancy: float  # mean occupied-slot fraction over decode ticks
     prefill_compiles: int  # engine-lifetime compiled prefill graph count
     decode_steps: int
+    #: guard.stats() when the run was coded (K/R, injected_faults,
+    #: recoveries, requests_recovered, recovery_us percentiles)
+    coded: dict | None = None
+
+    @property
+    def recoveries(self) -> int:
+        return int(self.coded["recoveries"]) if self.coded else 0
+
+    @property
+    def requests_recovered(self) -> int:
+        return int(self.coded["requests_recovered"]) if self.coded else 0
 
     def to_record(self) -> dict:
         """JSON-ready engine row for BENCH_serve.json."""
-        return {
+        rec = {
             "tokens_per_s": self.tokens_per_s,
             "ttft_ms": dict(self.ttft_ms),
             "e2e_ms": dict(self.e2e_ms),
@@ -214,6 +234,9 @@ class ServeReport:
             "n_requests": len(self.results),
             "wall_s": self.wall_s,
         }
+        if self.coded is not None:
+            rec["coded"] = dict(self.coded)
+        return rec
 
 
 class ContinuousEngine:
@@ -282,7 +305,7 @@ class ContinuousEngine:
         V = self.model.cfg.vocab_size
         G = self.max_new_tokens
 
-        def tick(params, cache, state, eos_id, key):
+        def tick(params, cache, state, eos_id, temperature):
             logits, cache = decode(
                 params, cache, state["last_tok"][:, None], state["pos"]
             )
@@ -290,8 +313,14 @@ class ContinuousEngine:
             if greedy:
                 nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
             else:
-                key, sk = jax.random.split(key)
-                nxt = jax.random.categorical(sk, lg).astype(jnp.int32)
+                # per-slot streams: token i of a request is sampled with
+                # fold_in(request_key, i) — independent of batch
+                # composition, so slot-scheduled == one-at-a-time
+                keys = jax.random.wrap_key_data(state["rng"])
+                tok_keys = jax.vmap(jax.random.fold_in)(keys, state["gen_count"])
+                nxt = jax.vmap(jax.random.categorical)(
+                    tok_keys, lg / temperature
+                ).astype(jnp.int32)
             active = state["active"]
             nxt = jnp.where(active, nxt, state["last_tok"])
             gc = state["gen_count"]
@@ -309,8 +338,9 @@ class ContinuousEngine:
                 "gen_buf": gen_buf,
                 "gen_count": gc,
                 "max_gen": state["max_gen"],
+                "rng": state["rng"],
             }
-            return cache, state, key
+            return cache, state
 
         return jax.jit(tick, donate_argnums=(1, 2))
 
@@ -328,14 +358,18 @@ class ContinuousEngine:
         V = self.model.cfg.vocab_size
         G = self.max_new_tokens
 
-        def prefill(params, cache, state, tokens, slot, plen, req_max, eos_id, key):
+        def prefill(
+            params, cache, state, tokens, slot, plen, req_max, eos_id,
+            rng_kd, temperature,
+        ):
             last, cache = raw(params, cache, tokens, slot, plen)
             lg = last[0, :V]
             if greedy:
                 t0 = jnp.argmax(lg).astype(jnp.int32)
             else:
-                key, sk = jax.random.split(key)
-                t0 = jax.random.categorical(sk, lg).astype(jnp.int32)
+                # token 0 of this request's stream (see _make_tick)
+                k0 = jax.random.fold_in(jax.random.wrap_key_data(rng_kd), 0)
+                t0 = jax.random.categorical(k0, lg / temperature).astype(jnp.int32)
             done = ((eos_id >= 0) & (t0 == eos_id)) | (req_max <= 1)
             row = jnp.zeros((G,), jnp.int32).at[0].set(t0)
             state = {
@@ -345,8 +379,9 @@ class ContinuousEngine:
                 "gen_buf": state["gen_buf"].at[slot].set(row),
                 "gen_count": state["gen_count"].at[slot].set(1),
                 "max_gen": state["max_gen"].at[slot].set(req_max),
+                "rng": state["rng"].at[slot].set(rng_kd),
             }
-            return cache, state, key
+            return cache, state
 
         return jax.jit(prefill, donate_argnums=(1, 2))
 
@@ -372,6 +407,8 @@ class ContinuousEngine:
         eos_id: int | None = None,
         seed: int = 0,
         sync_every: int = 4,
+        temperature: float = 1.0,
+        guard=None,
     ) -> ServeReport:
         """Run a trace of requests to completion; returns a ServeReport with
         per-request results in arrival order.
@@ -380,7 +417,17 @@ class ContinuousEngine:
         bool-mask fetch per chunk detects retirements (a finished slot may
         run up to ``sync_every - 1`` masked ticks before harvest — the
         latency/throughput knob).
+
+        ``guard`` (a :class:`repro.serve.coded.CodedServeGuard`) makes the
+        run straggler-tolerant: the decode-path state is LCC-encoded to
+        N = K + R coded hosts before every chunk, host faults are polled
+        at the chunk sync, and a lost host triggers exact reconstruction
+        from any K survivors + a deterministic chunk replay — in-flight
+        requests are recovered, not dropped, and the token streams stay
+        bit-identical to an unfailed run.
         """
+        if not greedy and temperature <= 0:
+            raise ValueError(f"sampling needs temperature > 0, got {temperature}")
         reg = self._registry()
         tracer = self._tracer
         ordered = sorted(requests, key=lambda r: (r.arrival_s, r.id))
@@ -397,10 +444,14 @@ class ContinuousEngine:
             "gen_buf": jnp.zeros((S, G), jnp.int32),
             "gen_count": jnp.zeros((S,), jnp.int32),
             "max_gen": jnp.zeros((S,), jnp.int32),
+            "rng": jnp.zeros((S, 2), jnp.uint32),
         }
-        key = jax.random.key(seed)
+        base_key = jax.random.key(seed)
+        temp = jnp.float32(temperature)
         eos = jnp.int32(-1 if eos_id is None else eos_id)
         tick = self._tick_for(greedy)
+        if guard is not None:
+            guard.attach(reg, tracer)
         meta: dict[int, tuple[Request, float]] = {}  # slot -> (req, ttft_s)
         results: dict[str, RequestResult] = {}
         ticks_active = ticks_total = decode_steps = 0
@@ -408,6 +459,11 @@ class ContinuousEngine:
 
         def now() -> float:
             return time.perf_counter() - t0
+
+        def run_chunk(cache, state):
+            for _ in range(sync_every):
+                cache, state = tick(self.params, cache, state, eos, temp)
+            return cache, state, np.asarray(state["active"])
 
         while sched.has_work:
             # 1. refill free slots with every arrived request (mid-decode
@@ -419,22 +475,25 @@ class ContinuousEngine:
                 pf = self._prefill_for(bucket, greedy)
                 toks = np.zeros((1, bucket), np.int32)
                 toks[0, :plen] = req.prompt
+                rng_kd = jax.random.key_data(
+                    jax.random.fold_in(base_key, _request_seed(req))
+                )
                 if tracer is not None:
                     with tracer.span(
                         "serve.prefill", slot=slot, bucket=bucket, plen=plen
                     ) as sp:
-                        cache, state, key = pf(
+                        cache, state = pf(
                             self.params, cache, state, jnp.asarray(toks),
                             jnp.int32(slot), jnp.int32(plen),
-                            jnp.int32(req.max_new_tokens), eos, key,
+                            jnp.int32(req.max_new_tokens), eos, rng_kd, temp,
                         )
                         jax.block_until_ready(state["last_tok"])
                     reg.histogram("serve.prefill_us").observe(sp.dur_us)
                 else:
-                    cache, state, key = pf(
+                    cache, state = pf(
                         self.params, cache, state, jnp.asarray(toks),
                         jnp.int32(slot), jnp.int32(plen),
-                        jnp.int32(req.max_new_tokens), eos, key,
+                        jnp.int32(req.max_new_tokens), eos, rng_kd, temp,
                     )
                     # first token is materialized here — that's TTFT
                     jax.block_until_ready(state["last_tok"])
@@ -451,22 +510,32 @@ class ContinuousEngine:
                     time.sleep(wait)
                 continue
             # 2. one decode chunk: sync_every fully-async ticks, then a
-            #    single host sync on the active mask to detect retirements
+            #    single host sync on the active mask to detect retirements.
+            #    Under a guard the chunk-start state was LCC-encoded first,
+            #    so a host lost mid-chunk costs one reconstruct + replay.
+            if guard is not None:
+                guard.snapshot(cache, state, tick=decode_steps)
             if tracer is not None:
                 with tracer.span(
                     "serve.decode_chunk", ticks=sync_every, occupied=len(occ)
                 ) as sp:
-                    for _ in range(sync_every):
-                        cache, state, key = tick(self.params, cache, state, eos, key)
-                    active_now = np.asarray(state["active"])
+                    cache, state, active_now = run_chunk(cache, state)
                 reg.histogram("serve.decode_chunk_us").observe(sp.dur_us)
             else:
-                for _ in range(sync_every):
-                    cache, state, key = tick(self.params, cache, state, eos, key)
-                active_now = np.asarray(state["active"])
+                cache, state, active_now = run_chunk(cache, state)
             decode_steps += sync_every
             ticks_active += len(occ) * sync_every
             ticks_total += S * sync_every
+            if guard is not None:
+                dead = guard.poll(decode_steps)
+                if dead:
+                    # exact chunk-start state from any K survivors, then a
+                    # deterministic replay (the PRNG lives in the state) —
+                    # the replayed tokens are bit-identical
+                    cache, state = guard.recover(
+                        dead, requests_in_flight=len(occ)
+                    )
+                    cache, state, active_now = run_chunk(cache, state)
             # 3. harvest + retire finished slots (they refill next iteration)
             finished = [s for s in occ if not active_now[s]]
             if finished:
@@ -503,4 +572,5 @@ class ContinuousEngine:
             slot_occupancy=occupancy,
             prefill_compiles=self.prefill_compiles,
             decode_steps=decode_steps,
+            coded=guard.stats() if guard is not None else None,
         )

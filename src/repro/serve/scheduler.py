@@ -49,6 +49,9 @@ class Request:
     prompt: list[int]
     max_new_tokens: int = 16
     arrival_s: float = 0.0
+    #: per-request sampling stream (None derives one from ``id``), so a
+    #: request's sampled tokens never depend on batch composition
+    seed: int | None = None
 
 
 @dataclass

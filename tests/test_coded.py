@@ -15,7 +15,9 @@ from repro.coded import (
     build_parity_plan,
     encode_parity,
     lcc_compute_and_decode,
+    lcc_decode,
     lcc_encode,
+    lcc_pad,
     limbs_to_state,
     recover_lost,
     shard_state_limbs,
@@ -130,3 +132,99 @@ def test_lcc_coded_matmul():
     out = lcc_compute_and_decode(plan, np.asarray(encoded), W, list(range(K)))
     for i in range(K):
         np.testing.assert_array_equal(out[i], f.matmul(X[i].astype(np.uint64), W))
+
+
+# ---------------------------------------------------------------------------
+# LCC erasure codes (N = K + R): ISSUE 10 property + edge cases
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("q", [M31, NTT])
+@pytest.mark.parametrize("K", [4, 8, 16])
+def test_lcc_erasure_roundtrip_both_fields(q, K):
+    """encode → drop R shards → decode is the identity over both fields,
+    K ∈ {4, 8, 16}, odd payload shapes."""
+    R = 2
+    rng = np.random.default_rng(K * 17 + (q & 0xFF))
+    plan = build_lcc(K, p=1, q=q, R=R)
+    assert plan.N == K + R
+    X = rng.integers(0, q, size=(K, 7, 3), dtype=np.uint64)  # odd payload
+    coded = np.asarray(lcc_encode(plan, jnp.asarray(X)), dtype=np.uint64)
+    assert coded.shape == (K + R,) + X.shape[1:]
+    # rows 0..K-1 of the coded output are NOT the data (Lagrange points
+    # differ from data points) — decode is what recovers it
+    for _ in range(5):
+        survivors = sorted(
+            int(r) for r in rng.choice(K + R, size=K, replace=False)
+        )
+        got = lcc_decode(plan, coded[survivors], survivors)
+        np.testing.assert_array_equal(got, X % q)
+
+
+@pytest.mark.parametrize("q", [M31, NTT])
+def test_lcc_compute_and_decode_with_parity_responders(q):
+    """f(X_i) = X_i @ W recovered from any K responders INCLUDING parity
+    hosts (indices ≥ K), over both fields."""
+    K, R = 4, 3
+    f = Field(q)
+    rng = np.random.default_rng(3)
+    plan = build_lcc(K, p=1, q=q, R=R)
+    X = rng.integers(0, 1 << 20, size=(K, 5, 3), dtype=np.uint64)
+    W = rng.integers(0, 1 << 20, size=(3, 2), dtype=np.uint64)
+    encoded = np.asarray(lcc_encode(plan, jnp.asarray(X)), dtype=np.uint64)
+    for responders in ([0, 1, 2, 3], [3, 4, 5, 6], [6, 0, 5, 2], [1, 6, 3, 5]):
+        out = lcc_compute_and_decode(plan, encoded, W, responders)
+        for i in range(K):
+            np.testing.assert_array_equal(
+                out[i], f.matmul(X[i] % q, W % q)
+            )
+
+
+def test_lcc_zero_size_payload_roundtrip():
+    """A (K, 0) payload must encode/decode without error — the degenerate
+    snapshot of an empty pytree."""
+    K, R = 4, 2
+    plan = build_lcc(K, R=R)
+    X = np.zeros((K, 0), dtype=np.uint64)
+    coded = np.asarray(lcc_encode(plan, jnp.asarray(X)))
+    assert coded.shape == (K + R, 0)
+    got = lcc_decode(plan, coded[:K], list(range(K)))
+    assert got.shape == (K, 0)
+
+
+def test_lcc_k_minus_1_survivors_raise_not_garbage():
+    """K−1 responders under-determine the degree-(K−1) polynomial: decode
+    must raise ValueError, never return interpolated garbage."""
+    K, R = 4, 2
+    plan = build_lcc(K, R=R)
+    X = np.arange(K * 6, dtype=np.uint64).reshape(K, 6)
+    coded = np.asarray(lcc_encode(plan, jnp.asarray(X)), dtype=np.uint64)
+    with pytest.raises(ValueError, match="need ≥4 responders"):
+        lcc_decode(plan, coded[: K - 1], list(range(K - 1)))
+    with pytest.raises(ValueError, match="duplicate"):
+        lcc_decode(plan, coded[[0, 0, 1, 2]], [0, 0, 1, 2])
+    with pytest.raises(ValueError, match="outside"):
+        lcc_decode(plan, coded[:K], [0, 1, 2, K + R])
+    with pytest.raises(ValueError):
+        build_lcc(K, R=-1)
+    with pytest.raises(ValueError, match="K=4 rows"):
+        lcc_pad(plan, np.zeros((K + 1, 3), np.uint64))
+
+
+@given(
+    K=st.sampled_from([4, 8, 16]),
+    R=st.integers(1, 4),
+    pay=st.integers(1, 31),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=12, deadline=None)
+def test_lcc_erasure_roundtrip_property(K, R, pay, seed):
+    q = NTT if seed % 2 else M31
+    rng = np.random.default_rng(seed)
+    plan = build_lcc(K, p=1, q=q, R=R)
+    X = rng.integers(0, q, size=(K, pay), dtype=np.uint64)
+    coded = np.asarray(lcc_encode(plan, jnp.asarray(X)), dtype=np.uint64)
+    survivors = sorted(int(r) for r in rng.choice(K + R, size=K, replace=False))
+    np.testing.assert_array_equal(
+        lcc_decode(plan, coded[survivors], survivors), X % q
+    )

@@ -1,0 +1,425 @@
+"""Coded straggler-tolerant serving (ISSUE 10): fault-injection
+differential harness.
+
+Acceptance:
+* For EVERY survivor subset of size K (exhaustive at N ≤ 8 by killing
+  each R-subset's complement; hypothesis-sampled above), the coded
+  engine's token streams after mid-trace host kills are bit-identical to
+  both the unfailed continuous run and the unfailed fixed-batch engine
+  on the same seeded trace.
+* An 8-forced-host-device subprocess variant SIGKILLs one real host
+  process (``ProcessHostPool``) mid-decode while the guard's encode runs
+  through the mesh collective (``ir_encode_jit``) — still bit-identical,
+  ``serve.recoveries`` ≥ 1.
+* ``tools/check_trace.py --kind coded-serve`` gates fresh and committed
+  ``BENCH_coded_serve.json`` records (recoveries ≥ injected faults,
+  ordered recovery percentiles, token-identity flag).
+"""
+
+import functools
+import itertools
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+from hyputil import given, settings, st
+
+import jax
+
+from repro.configs import smoke_config
+from repro.models import build_model
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
+from repro.serve import (
+    CodedDecodeGroup,
+    CodedServeGuard,
+    ContinuousEngine,
+    Engine,
+    FaultInjector,
+    ProcessHostPool,
+    Request,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+PROMPTS = [[5, 9, 2, 7, 1], [3, 3, 8], [11, 4, 6, 2], [2]]
+MAX_NEW = 6
+
+
+@functools.lru_cache(maxsize=2)
+def _smoke(arch: str = "qwen3-1.7b"):
+    cfg = smoke_config(arch).replace(n_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+@functools.lru_cache(maxsize=2)
+def _engine():
+    cfg, model, params = _smoke()
+    return ContinuousEngine(
+        model, params, n_slots=2, max_len=32, buckets=(8, 16),
+        max_new_tokens=MAX_NEW, metrics=MetricsRegistry(),
+    )
+
+
+def _reqs(**kw):
+    return [
+        Request(id=f"r{i}", prompt=p, max_new_tokens=MAX_NEW, **kw)
+        for i, p in enumerate(PROMPTS)
+    ]
+
+
+def _toks(report) -> dict:
+    return {r.id: tuple(r.tokens) for r in report.results}
+
+
+@functools.lru_cache(maxsize=4)
+def _baseline(greedy: bool = True, temperature: float = 1.0):
+    rep = _engine().serve(
+        _reqs(), greedy=greedy, sync_every=2, seed=0, temperature=temperature
+    )
+    return _toks(rep)
+
+
+# ---------------------------------------------------------------------------
+# unit: injector + guard edges
+# ---------------------------------------------------------------------------
+
+
+def test_fault_injector_fires_each_kill_once():
+    inj = FaultInjector(kills=((2, 0), (2, 3), (9, 1)))
+    assert inj.due(1) == []
+    assert inj.due(4) == [(2, 0), (2, 3)]
+    assert inj.due(5) == []  # already fired
+    assert inj.due(100) == [(9, 1)]
+    assert inj.injected == 3
+
+
+def test_guard_requires_parity_and_snapshot():
+    with pytest.raises(ValueError):
+        CodedServeGuard(K=4, R=0)
+    g = CodedServeGuard(K=3, R=1)
+    with pytest.raises(RuntimeError, match="no snapshot"):
+        g.recover([0])
+
+
+def test_guard_beyond_tolerance_raises():
+    """Losing R+1 hosts is past the code: recover must raise, not return
+    interpolated garbage."""
+    import jax.numpy as jnp
+
+    g = CodedServeGuard(K=3, R=1, injector=FaultInjector(kills=((0, 0), (0, 2))))
+    state = {"x": jnp.arange(6, dtype=jnp.float32)}
+    g.snapshot({}, state, tick=0)
+    dead = g.poll(4)
+    assert dead == [0, 2]
+    with pytest.raises(RuntimeError, match="need K=3"):
+        g.recover(dead)
+
+
+# ---------------------------------------------------------------------------
+# the tentpole differential: every survivor subset, exhaustive at N ≤ 8
+# ---------------------------------------------------------------------------
+
+K, R = 3, 2  # N = 5 hosts; killing each 2-subset forces every 3-survivor set
+
+
+def test_coded_serve_every_survivor_subset_bit_identical():
+    """Exhaustive at N = 5 ≤ 8: for every R-subset of hosts killed
+    mid-trace (⇔ every survivor subset of size K reconstructs), the coded
+    engine's tokens equal the unfailed continuous AND fixed-batch runs."""
+    eng = _engine()
+    base = _baseline()
+
+    # the unfailed fixed-batch engine on the same trace (greedy)
+    cfg, model, params = _smoke()
+    fixed = Engine(model, params, max_len=32, metrics=MetricsRegistry())
+    res = fixed.generate(PROMPTS, max_new_tokens=MAX_NEW)
+    fixed_toks = {
+        f"r{b}": tuple(res.tokens[b, : len(PROMPTS[b]) + MAX_NEW].tolist())
+        for b in range(len(PROMPTS))
+    }
+    assert base == fixed_toks  # continuous == fixed-batch, unfailed
+
+    for killed in itertools.combinations(range(K + R), R):
+        inj = FaultInjector(kills=tuple((1, h) for h in killed))
+        guard = CodedServeGuard(K=K, R=R, injector=inj)
+        rep = eng.serve(_reqs(), greedy=True, sync_every=2, guard=guard)
+        assert sorted(guard.alive) == [
+            h for h in range(K + R) if h not in killed
+        ]
+        assert _toks(rep) == base, f"tokens diverged after killing {killed}"
+        assert rep.recoveries == R
+        assert rep.coded["injected_faults"] == R
+        assert len(guard.recovery_us) >= 1
+
+
+def test_coded_serve_staggered_kills_and_metrics():
+    """Kills at different ticks (two separate recovery events), metrics +
+    spans recorded, requests in flight recovered not dropped."""
+    eng = _engine()
+    reg, tracer = MetricsRegistry(), Tracer()
+    saved = eng._metrics, eng._tracer
+    eng._metrics, eng._tracer = reg, tracer
+    try:
+        guard = CodedServeGuard(
+            K=K, R=R, injector=FaultInjector(kills=((1, 0), (5, 4)))
+        )
+        rep = eng.serve(_reqs(), greedy=True, sync_every=2, guard=guard)
+    finally:
+        eng._metrics, eng._tracer = saved
+    assert _toks(rep) == _baseline()
+    snap = reg.snapshot()
+    assert snap["serve.recoveries"]["value"] == 2
+    assert snap["serve.recovery_us"]["count"] == 2
+    assert snap["serve.recovery_us"]["p50"] <= snap["serve.recovery_us"]["p99"]
+    assert snap["serve.snapshots"]["value"] == rep.coded["snapshots"] > 0
+    assert rep.requests_recovered >= 1
+    spans = [s for s in tracer.spans if s.name == "serve.recovery"]
+    assert len(spans) == 2 and all(s.dur_us > 0 for s in spans)
+
+
+def test_coded_serve_sampled_temperature_bit_identical():
+    """temperature > 0: per-slot PRNG streams live in the encoded state, so
+    the replayed chunk resamples the SAME tokens."""
+    eng = _engine()
+    base = _baseline(greedy=False, temperature=0.7)
+    guard = CodedServeGuard(K=K, R=R, injector=FaultInjector(kills=((2, 1),)))
+    rep = eng.serve(
+        _reqs(), greedy=False, sync_every=2, seed=0, temperature=0.7,
+        guard=guard,
+    )
+    assert _toks(rep) == base
+    assert rep.recoveries == 1
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=5, deadline=None)
+def test_coded_serve_sampled_survivor_subsets_above_8(seed):
+    """N = 10 > 8: hypothesis-sampled R-subsets of killed hosts (each ⇔ one
+    survivor subset of size K) instead of all C(10,3) of them."""
+    rng = np.random.default_rng(seed)
+    Kb, Rb = 7, 3
+    killed = tuple(int(h) for h in rng.choice(Kb + Rb, size=Rb, replace=False))
+    eng = _engine()
+    guard = CodedServeGuard(
+        K=Kb, R=Rb, injector=FaultInjector(kills=tuple((1, h) for h in killed))
+    )
+    rep = eng.serve(_reqs(), greedy=True, sync_every=2, guard=guard)
+    assert _toks(rep) == _baseline(), f"diverged for killed={killed}"
+    assert rep.recoveries == Rb
+
+
+# ---------------------------------------------------------------------------
+# real host processes: SIGKILL mid-decode, 8 forced host devices
+# ---------------------------------------------------------------------------
+
+
+def test_process_host_pool_store_fetch_kill():
+    with ProcessHostPool(3) as pool:
+        arr = np.arange(17, dtype=np.uint32)
+        assert pool.store(0, arr)
+        np.testing.assert_array_equal(pool.fetch(0), arr)
+        assert pool.fetch(1) is None  # nothing stored yet
+        pool.kill(2)
+        assert not pool.alive(2)
+        assert not pool.store(2, arr)
+        assert pool.fetch(2) is None
+
+
+def test_coded_serve_sigkilled_host_process():
+    """In-process engine + real OS host processes: the injector's kill is a
+    SIGKILL; tokens still bit-identical."""
+    eng = _engine()
+    with ProcessHostPool(K + R) as pool:
+        guard = CodedServeGuard(
+            K=K, R=R, injector=FaultInjector(kills=((1, 2),)), hosts=pool
+        )
+        rep = eng.serve(_reqs(), greedy=True, sync_every=2, guard=guard)
+        assert not pool.alive(2)  # actually dead, not simulated
+        assert _toks(rep) == _baseline()
+        assert rep.recoveries == 1
+
+
+def test_coded_serve_mesh_8_host_devices_sigkill():
+    """The satellite's subprocess variant: 8 forced host devices, the
+    guard's Lagrange encode running as a mesh collective (ppermute rounds
+    via ir_encode_jit on an 8-wide 'hosts' axis), one ProcessHostPool host
+    SIGKILLed mid-decode — recovered, bit-identical, recoveries ≥ 1."""
+    code = """
+    import numpy as np, jax
+    from repro.configs import smoke_config
+    from repro.launch.mesh import make_mesh
+    from repro.models import build_model
+    from repro.obs.metrics import MetricsRegistry
+    from repro.serve import (CodedServeGuard, ContinuousEngine, FaultInjector,
+                             ProcessHostPool, Request)
+
+    assert jax.device_count() == 8
+    cfg = smoke_config("qwen3-1.7b").replace(n_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    prompts = [[5, 9, 2, 7, 1], [3, 3, 8], [11, 4, 6, 2], [2]]
+    def reqs():
+        return [Request(id=f"r{i}", prompt=p, max_new_tokens=6)
+                for i, p in enumerate(prompts)]
+    reg = MetricsRegistry()
+    eng = ContinuousEngine(model, params, n_slots=2, max_len=32,
+                           buckets=(8, 16), max_new_tokens=6, metrics=reg)
+    base = [r.tokens for r in eng.serve(reqs(), greedy=True, sync_every=2).results]
+
+    mesh = make_mesh((8,), ("hosts",))  # N = K + R = 8 coded shard hosts
+    with ProcessHostPool(8) as pool:
+        guard = CodedServeGuard(K=6, R=2, injector=FaultInjector(kills=((1, 3),)),
+                                hosts=pool, mesh=mesh, axis="hosts")
+        rep = eng.serve(reqs(), greedy=True, sync_every=2, guard=guard)
+        assert not pool.alive(3)          # the SIGKILL landed
+        got = [r.tokens for r in rep.results]
+        assert got == base, (got, base)
+        assert rep.recoveries >= 1
+        assert reg.snapshot()["serve.recoveries"]["value"] >= 1
+    print("CODED-MESH-OK")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert r.returncode == 0, f"child failed:\nSTDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "CODED-MESH-OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# decode group (host bookkeeping without an engine)
+# ---------------------------------------------------------------------------
+
+
+def test_decode_group_reconstructs_any_k_of_n():
+    from repro.coded import build_lcc, lcc_encode, lcc_pad
+
+    plan = build_lcc(3, R=2)
+    X = np.arange(3 * 11, dtype=np.uint32).reshape(3, 11)
+    coded = np.asarray(lcc_encode(plan, lcc_pad(plan, X)[: plan.K]))
+    for killed in itertools.combinations(range(5), 2):
+        grp = CodedDecodeGroup(plan)
+        grp.store(coded.astype(np.uint32).reshape(5, -1))
+        for h in killed:
+            assert grp.kill(h)
+            assert not grp.kill(h)  # can't die twice
+        np.testing.assert_array_equal(grp.reconstruct().reshape(3, 11), X)
+
+
+def test_decode_group_host_count_mismatch():
+    from repro.coded import build_lcc
+
+    plan = build_lcc(3, R=2)
+    with ProcessHostPool(4) as pool:  # needs 5
+        with pytest.raises(ValueError, match="need N=5"):
+            CodedDecodeGroup(plan, hosts=pool)
+
+
+# ---------------------------------------------------------------------------
+# validator: coded-serve record kind, fresh + committed
+# ---------------------------------------------------------------------------
+
+
+def _coded_serve_record(**edits):
+    cont = {
+        "tokens_per_s": 100.0, "ttft_ms": {"p50": 1.0, "p99": 2.0},
+        "e2e_ms": {"p50": 3.0, "p99": 4.0}, "n_requests": 4, "wall_s": 0.5,
+        "slot_occupancy": 0.8, "prefill_compiles": 2, "decode_steps": 40,
+    }
+    coded_blk = {
+        "K": 3, "R": 2, "n_hosts": 5, "injected_faults": 1, "recoveries": 1,
+        "requests_recovered": 2, "snapshots": 9,
+        "recovery_us": {"p50": 100.0, "p99": 200.0},
+    }
+    rec = {
+        "workload": {"n_requests": 4, "rate_rps": 50.0, "seed": 0},
+        "n_slots": 2,
+        "buckets": [8, 16],
+        "coded": {"K": 3, "R": 2, "n_hosts": 5},
+        "engines": {"uncoded": dict(cont), "coded": dict(cont)},
+        "fault_scenarios": [
+            {"kills": 1, "tokens_identical": True, "tokens_per_s": 90.0,
+             "coded": dict(coded_blk)},
+        ],
+    }
+    for dotted, v in edits.items():
+        cur = rec
+        parts = dotted.split(".")
+        for p in parts[:-1]:
+            cur = cur[int(p)] if p.isdigit() else cur[p]
+        cur[parts[-1]] = v
+    return rec
+
+
+def test_check_trace_coded_serve_kind():
+    sys.path.insert(0, os.path.join(REPO, "tools"))
+    try:
+        import check_trace
+
+        assert check_trace.check_coded_serve(_coded_serve_record()) == []
+        # a fault went unrecovered
+        bad = _coded_serve_record(**{"fault_scenarios.0.coded.recoveries": 0})
+        assert check_trace.check_coded_serve(bad)
+        # recovery latency percentiles out of order
+        bad = _coded_serve_record(
+            **{"fault_scenarios.0.coded.recovery_us": {"p50": 9.0, "p99": 2.0}}
+        )
+        assert check_trace.check_coded_serve(bad)
+        # recoveries claimed but latency never measured
+        bad = _coded_serve_record(
+            **{"fault_scenarios.0.coded.recovery_us": {"p50": 0.0, "p99": 0.0}}
+        )
+        assert check_trace.check_coded_serve(bad)
+        # token identity must hold
+        bad = _coded_serve_record(**{"fault_scenarios.0.tokens_identical": False})
+        assert check_trace.check_coded_serve(bad)
+        # missing the recovery block entirely
+        bad = _coded_serve_record()
+        del bad["fault_scenarios"][0]["coded"]
+        assert check_trace.check_coded_serve(bad)
+    finally:
+        sys.path.pop(0)
+
+
+def test_check_trace_coded_serve_cli_fresh(tmp_path):
+    sys.path.insert(0, os.path.join(REPO, "tools"))
+    try:
+        import check_trace
+
+        path = tmp_path / "BENCH_coded_serve.json"
+        path.write_text(json.dumps(_coded_serve_record()))
+        assert check_trace.main([str(path)]) == 0  # auto-detected
+        assert check_trace.main(["--kind", "coded-serve", str(path)]) == 0
+    finally:
+        sys.path.pop(0)
+
+
+def test_committed_bench_record_gates():
+    """The committed BENCH_coded_serve.json must pass the validator and
+    show ≥ 1 recovery with token identity (the PR's acceptance bar)."""
+    path = os.path.join(REPO, "results", "BENCH_coded_serve.json")
+    assert os.path.exists(path), "results/BENCH_coded_serve.json not committed"
+    with open(path) as fh:
+        rec = json.load(fh)
+    sys.path.insert(0, os.path.join(REPO, "tools"))
+    try:
+        import check_trace
+
+        assert check_trace.check_coded_serve(rec) == []
+    finally:
+        sys.path.pop(0)
+    assert any(
+        s["coded"]["recoveries"] >= 1 and s["tokens_identical"]
+        for s in rec["fault_scenarios"]
+    )

@@ -156,5 +156,14 @@ def test_public_topo_and_dist_api_is_documented():
         "supports_prefill",
         "make_prefill_step",
         "LengthBand",
+        # coded straggler-tolerant serving (PR 10)
+        "CodedServeGuard",
+        "CodedDecodeGroup",
+        "FaultInjector",
+        "ProcessHostPool",
+        "build_lcc",
+        "lcc_encode_collective",
+        "lcc_decode",
+        "shard_state_limbs",
     ]:
         assert name in all_docs, f"public symbol {name} not mentioned in docs"

@@ -230,6 +230,45 @@ def test_continuous_matches_one_at_a_time(arch):
     assert all(r.ttft_s >= 0 and r.e2e_s >= r.ttft_s for r in rep.results)
 
 
+def test_sampled_decoding_batch_invariant():
+    """ISSUE 10 fix: sampled decoding (temperature > 0) draws token i of a
+    request from fold_in(request_key, i) — a per-slot stream independent
+    of batch composition — so slot-scheduled output is token-identical to
+    the same prompts served one at a time, like greedy already was."""
+    cfg, model, params = _smoke("qwen3-1.7b")
+    reqs = [
+        Request(id=f"r{i}", prompt=p, max_new_tokens=5)
+        for i, p in enumerate(PROMPTS)
+    ]
+    batched = ContinuousEngine(
+        model, params, n_slots=3, max_len=32, buckets=(8, 16),
+        max_new_tokens=8, metrics=MetricsRegistry(),
+    )
+    solo = ContinuousEngine(
+        model, params, n_slots=1, max_len=32, buckets=(8, 16),
+        max_new_tokens=8, metrics=MetricsRegistry(),
+    )
+    rep = batched.serve(reqs, greedy=False, seed=3, temperature=0.8, sync_every=2)
+    got = {r.id: r.tokens for r in rep.results}
+    for req in reqs:
+        one = solo.serve([req], greedy=False, seed=3, temperature=0.8)
+        assert got[req.id] == one.results[0].tokens, req.id
+    # an explicit per-request seed overrides the id-derived stream
+    seeded = [
+        Request(id=f"s{i}", prompt=p, max_new_tokens=5, seed=77)
+        for i, p in enumerate(PROMPTS[:2])
+    ]
+    rep2 = batched.serve(seeded, greedy=False, seed=3, temperature=0.8)
+    same_prompt = [
+        Request(id="other-id", prompt=PROMPTS[0], max_new_tokens=5, seed=77)
+    ]
+    rep3 = solo.serve(same_prompt, greedy=False, seed=3, temperature=0.8)
+    assert rep2.results[0].tokens == rep3.results[0].tokens
+    # temperature must be positive when sampling
+    with pytest.raises(ValueError, match="temperature"):
+        batched.serve(reqs, greedy=False, temperature=0.0)
+
+
 def test_continuous_eos_trims_generation():
     cfg, model, params = _smoke("qwen3-1.7b")
     buckets, max_len, max_new = (8,), 24, 6

@@ -24,6 +24,13 @@ Three kinds, auto-detected from content (or forced with ``--kind``):
   block, ``slot_occupancy ∈ [0, 1]``, and the continuous engine's
   prefill compile count bounded by the bucket set
   (``prefill_compiles ≤ len(buckets)``).
+* ``coded-serve`` — ``results/BENCH_coded_serve.json`` from
+  ``benchmarks/bench_coded_serve.py``: uncoded vs LCC-coded engine rows
+  plus fault-injection scenarios. Semantic gates on every scenario:
+  ``recoveries ≥ injected_faults`` (no fault goes unrecovered),
+  ``recovery_us`` present with ``p50 ≤ p99``, and the decoded-token-
+  identity flag ``tokens_identical`` true (the coded run's token
+  streams matched the unfailed baseline bit-for-bit).
 
 The validator is a small hand-rolled structural checker (dependency-free on
 purpose — ``jsonschema`` is not one of the project's declared deps), with a
@@ -254,6 +261,113 @@ def check_serve(record: dict) -> list[str]:
     return errs
 
 
+_RECOVERY_BLOCK = {
+    "type": "object",
+    "required": ["K", "R", "n_hosts", "injected_faults", "recoveries",
+                 "requests_recovered", "snapshots", "recovery_us"],
+    "properties": {
+        "K": {"type": "integer", "minimum": 1},
+        "R": {"type": "integer", "minimum": 1},
+        "n_hosts": {"type": "integer", "minimum": 2},
+        "injected_faults": {"type": "integer", "minimum": 0},
+        "recoveries": {"type": "integer", "minimum": 0},
+        "requests_recovered": {"type": "integer", "minimum": 0},
+        "snapshots": {"type": "integer", "minimum": 0},
+        "recovery_us": _LATENCY_BLOCK,
+    },
+}
+
+_SCENARIO_ROW = {
+    "type": "object",
+    "required": ["kills", "tokens_identical", "tokens_per_s", "coded"],
+    "properties": {
+        "kills": {"type": "integer", "minimum": 1},
+        "tokens_identical": {"type": "boolean"},
+        "tokens_per_s": {"type": "number", "minimum": 0},
+        "coded": _RECOVERY_BLOCK,
+    },
+}
+
+CODED_SERVE_SCHEMA = {
+    "type": "object",
+    "required": ["workload", "n_slots", "buckets", "coded", "engines",
+                 "fault_scenarios"],
+    "properties": {
+        "n_slots": SERVE_SCHEMA["properties"]["n_slots"],
+        "buckets": SERVE_SCHEMA["properties"]["buckets"],
+        "workload": SERVE_SCHEMA["properties"]["workload"],
+        "coded": {
+            "type": "object",
+            "required": ["K", "R", "n_hosts"],
+            "properties": {
+                "K": {"type": "integer", "minimum": 1},
+                "R": {"type": "integer", "minimum": 1},
+                "n_hosts": {"type": "integer", "minimum": 2},
+            },
+        },
+        "engines": {
+            "type": "object",
+            "required": ["uncoded", "coded"],
+            "properties": {
+                "uncoded": _CONTINUOUS_ROW,
+                "coded": _CONTINUOUS_ROW,
+            },
+        },
+        "fault_scenarios": {"type": "array", "items": _SCENARIO_ROW},
+    },
+}
+
+
+def check_coded_serve(record: dict) -> list[str]:
+    """CODED_SERVE_SCHEMA + the fault-tolerance invariants: every injected
+    fault recovered, ordered recovery percentiles, token identity true."""
+    errs = validate(record, CODED_SERVE_SCHEMA)
+    if errs:
+        return errs
+    for ename, row in record["engines"].items():
+        for blk in ("ttft_ms", "e2e_ms"):
+            if row[blk]["p50"] > row[blk]["p99"]:
+                errs.append(
+                    f"$.engines.{ename}.{blk}: p50 {row[blk]['p50']} > "
+                    f"p99 {row[blk]['p99']}"
+                )
+        if not (0.0 <= row["slot_occupancy"] <= 1.0):
+            errs.append(
+                f"$.engines.{ename}.slot_occupancy: "
+                f"{row['slot_occupancy']} outside [0, 1]"
+            )
+    for i, sc in enumerate(record["fault_scenarios"]):
+        c = sc["coded"]
+        where = f"$.fault_scenarios[{i}]"
+        if c["recoveries"] < c["injected_faults"]:
+            errs.append(
+                f"{where}.coded: recoveries {c['recoveries']} < "
+                f"injected_faults {c['injected_faults']} "
+                "(a fault went unrecovered)"
+            )
+        if c["injected_faults"] < sc["kills"]:
+            errs.append(
+                f"{where}.coded: injected_faults {c['injected_faults']} < "
+                f"scheduled kills {sc['kills']}"
+            )
+        if c["recoveries"] > 0 and c["recovery_us"]["p99"] <= 0:
+            errs.append(
+                f"{where}.coded.recovery_us: recoveries happened but "
+                "p99 is 0 (latency not measured)"
+            )
+        if c["recovery_us"]["p50"] > c["recovery_us"]["p99"]:
+            errs.append(
+                f"{where}.coded.recovery_us: p50 "
+                f"{c['recovery_us']['p50']} > p99 {c['recovery_us']['p99']}"
+            )
+        if sc["tokens_identical"] is not True:
+            errs.append(
+                f"{where}.tokens_identical: false — the coded run's token "
+                "streams diverged from the unfailed baseline"
+            )
+    return errs
+
+
 def check_trace(record: dict) -> list[str]:
     """TRACE_SCHEMA + the semantic invariants the exporter guarantees:
     start-time-sorted events and predicted_us on every comm-round span."""
@@ -311,7 +425,9 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("path")
     ap.add_argument(
-        "--kind", choices=["trace", "bench", "serve", "auto"], default="auto"
+        "--kind",
+        choices=["trace", "bench", "serve", "coded-serve", "auto"],
+        default="auto",
     )
     args = ap.parse_args(argv)
     with open(args.path) as fh:
@@ -327,11 +443,18 @@ def main(argv=None) -> int:
         if kind == "auto":
             if "traceEvents" in record:
                 kind = "trace"
+            elif "coded" in record and "fault_scenarios" in record:
+                kind = "coded-serve"
             elif "engines" in record:
                 kind = "serve"
             else:
                 kind = "bench"
-    checker = {"trace": check_trace, "bench": check_bench, "serve": check_serve}
+    checker = {
+        "trace": check_trace,
+        "bench": check_bench,
+        "serve": check_serve,
+        "coded-serve": check_coded_serve,
+    }
     errs = checker[kind](record)
     if errs:
         for e in errs:
@@ -341,6 +464,14 @@ def main(argv=None) -> int:
         detail = f"{len(record.get('traceEvents', []))} events"
     elif kind == "serve":
         detail = f"{record['workload']['n_requests']} requests"
+    elif kind == "coded-serve":
+        recov = sum(
+            s["coded"]["recoveries"] for s in record["fault_scenarios"]
+        )
+        detail = (
+            f"{len(record['fault_scenarios'])} fault scenarios, "
+            f"{recov} recoveries"
+        )
     else:
         detail = (
             f"{len(record.get('calibration', {}).get('samples', []))} "
